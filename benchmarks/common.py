@@ -1,0 +1,66 @@
+"""Shared benchmark utilities.
+
+Wall-clock on this CPU container is NOT the deliverable (kernels run in
+interpret mode); each benchmark therefore reports *analytic* quantities
+derived from the same machinery the TPU path uses — exact IO byte
+counts, cost-model makespans, plan statistics — plus CPU wall time where
+it is meaningful (plan construction, end-to-end smoke decode).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import plan as plan_mod, tree as tree_mod
+from repro.core.cost_model import CostModel
+
+ROWS: List[Dict] = []
+
+
+def emit(bench: str, name: str, us_per_call: float = 0.0, **derived):
+    row = dict(bench=bench, name=name, us_per_call=us_per_call, **derived)
+    ROWS.append(row)
+    extras = " ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in derived.items())
+    print(f"{bench},{name},{us_per_call:.2f},{extras}")
+    return row
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6   # us
+
+
+# Paper default model: qwen3-4b heads (32 q / 8 kv / d128)
+def paper_cost_model(page_size: int = 64) -> CostModel:
+    return CostModel(32, 8, 128, page_size=page_size)
+
+
+def codec_vs_flash(forest: tree_mod.PrefixForest, cm: CostModel,
+                   num_lanes: int = 8, max_q: int = 64,
+                   max_kv: int = 8192):
+    """Modeled makespan + exact IO for the codec plan vs the
+    FlashDecoding (per-request) plan on the same forest."""
+    plan_mod.assign_dense_pages(forest)
+    pc = plan_mod.build_plan(forest, cm, num_lanes, max_q, max_kv)
+    pf = plan_mod.flash_plan(forest, cm, num_lanes, max_q, max_kv)
+    io_c = forest.codec_io_bytes(cm.h_kv, cm.d)
+    io_f = forest.flash_io_bytes(cm.h_kv, cm.d)
+    return dict(
+        makespan_codec_ms=pc.makespan * 1e3,
+        makespan_flash_ms=pf.makespan * 1e3,
+        speedup=pf.makespan / max(pc.makespan, 1e-12),
+        io_codec_mb=io_c / 1e6,
+        io_flash_mb=io_f / 1e6,
+        io_reduction=io_f / max(io_c, 1),
+        tasks_codec=pc.num_tasks,
+        tasks_flash=pf.num_tasks,
+        occupancy=pc.stats()["grid_occupancy"],
+    )

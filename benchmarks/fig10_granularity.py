@@ -1,0 +1,44 @@
+"""Paper Fig. 10: division-granularity sweep — naive fixed division count
+vs CoDec's adaptive division + scheduling."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, paper_cost_model
+from repro.core import tree as tree_mod
+from repro.core.scheduler import (TaskSpec, divide_and_schedule, lpt,
+                                  naive_divide)
+
+PAGE = 64
+LANES = 8
+
+
+def main() -> None:
+    cm = paper_cost_model(PAGE)
+    workloads = {
+        "docqa_120k": tree_mod.two_level(32, 120_000 // PAGE * PAGE,
+                                         2048, PAGE),
+        "kary_d4": tree_mod.full_kary(4, 2, 16384, PAGE),
+    }
+    for wname, f in workloads.items():
+        tasks = [TaskSpec(n.id, len(n.requests), n.length)
+                 for n in f.real_nodes()]
+        best_naive = None
+        for k in (1, 2, 4, 8, 16, 32, 64):
+            subs = naive_divide(tasks, k, cm, PAGE)
+            _, lane_cost = lpt(subs, LANES)
+            mk = max(lane_cost)
+            emit("fig10", f"{wname}_naive_k{k}", makespan_ms=mk * 1e3,
+                 subtasks=len(subs))
+            best_naive = mk if best_naive is None else min(best_naive, mk)
+        sched = divide_and_schedule(tasks, cm, LANES, PAGE)
+        emit("fig10", f"{wname}_adaptive",
+             makespan_ms=sched.makespan * 1e3,
+             subtasks=len(sched.subtasks),
+             vs_best_naive=best_naive / max(sched.makespan, 1e-12),
+             vs_no_division=(lambda: (lambda s1: max(s1))(
+                 lpt(naive_divide(tasks, 1, cm, PAGE), LANES)[1])
+                 / max(sched.makespan, 1e-12))())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 11: CPU overhead of computing the division plan vs batch.
+
+Measures the real wall time of cost estimation + division + LPT + plan
+array construction (this is genuinely a CPU activity, so wall time here
+IS the deliverable even on this container), and the amortized per-step
+cost under the engine's plan-reuse policy.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, paper_cost_model, timeit
+from repro.core import plan as plan_mod, tree as tree_mod
+
+PAGE = 64
+
+
+def main() -> None:
+    cm = paper_cost_model(PAGE)
+    for bs in (4, 8, 16, 32, 64, 128):
+        f = tree_mod.two_level(bs, 120_000 // PAGE * PAGE, 2048, PAGE)
+        plan_mod.assign_dense_pages(f)
+        us = timeit(lambda: plan_mod.build_plan(f, cm, 8, 256, 8192),
+                    repeats=3)
+        emit("fig11", f"bs{bs}", us_per_call=us,
+             plan_ms=us / 1e3,
+             amortized_ms=us / 1e3 / 16)   # plan reused ~16 decode steps
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 12 analogue: hardware sweep.
+
+The paper sweeps five GPUs; the TPU target has no card zoo, so we sweep
+the roofline constants (peak FLOP/s, HBM bandwidth) across accelerator
+classes and report the modeled CoDec-vs-FlashDecoding speedup on the
+same 50k-context workload — reproducing the paper's observation that
+the win GROWS as memory bandwidth shrinks (decode attention is
+bandwidth-bound, and CoDec removes bandwidth).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import plan as plan_mod, tree as tree_mod
+from repro.core.cost_model import CostModel, HardwareSpec
+
+PAGE = 64
+
+HW = {  # (peak FLOP/s, HBM B/s) — public datasheet numbers
+    "tpu_v5e": (197e12, 819e9),
+    "tpu_v5p": (459e12, 2765e9),
+    "h800-like": (990e12, 3350e9),
+    "a100-like": (312e12, 1555e9),
+    "a6000-like": (155e12, 768e9),
+    "4090-like": (330e12, 1008e9),
+}
+
+
+def main() -> None:
+    f0 = tree_mod.two_level(32, 50_000 // PAGE * PAGE, 2048, PAGE)
+    for name, (flops, bw) in HW.items():
+        cm = CostModel(32, 8, 128, page_size=PAGE,
+                       hw=HardwareSpec(peak_flops=flops, hbm_bw=bw))
+        f = tree_mod.two_level(32, 50_000 // PAGE * PAGE, 2048, PAGE)
+        plan_mod.assign_dense_pages(f)
+        pc = plan_mod.build_plan(f, cm, 8, 256, 8192)
+        pf = plan_mod.flash_plan(f, cm, 8, 256, 8192)
+        emit("fig12", name,
+             codec_ms=pc.makespan * 1e3, flash_ms=pf.makespan * 1e3,
+             speedup=pf.makespan / max(pc.makespan, 1e-12),
+             hbm_gbps=bw / 1e9)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 13: attention variants (MHA/GQA/MQA) and model sizes.
+
+(a) GQA group sweep at fixed q-head count: CoDec's KV-page reuse grows
+    with the group size (one KV head's page feeds `group` query rows).
+(b) Model-family sweep over the assigned archs' real head layouts.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import codec_vs_flash, emit
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCH, get_config
+from repro.core import tree as tree_mod
+from repro.core.cost_model import CostModel
+
+PAGE = 64
+
+
+def main() -> None:
+    # (a) GQA sweep: 32 query heads, kv heads in {32 (MHA) .. 1 (MQA)}
+    for hkv in (32, 16, 8, 4, 2, 1):
+        cm = CostModel(32, hkv, 128, page_size=PAGE)
+        f = tree_mod.two_level(32, 120_000 // PAGE * PAGE, 2048, PAGE)
+        r = codec_vs_flash(f, cm)
+        kind = "MHA" if hkv == 32 else ("MQA" if hkv == 1 else f"GQA{32//hkv}")
+        emit("fig13_gqa", f"kv{hkv}_{kind}", **r)
+
+    # (b) real model head layouts (attention archs only)
+    for arch in ASSIGNED_ARCHS + [PAPER_ARCH]:
+        cfg = get_config(arch)
+        if cfg.num_heads == 0:
+            emit("fig13_models", arch, skipped=1,
+                 note="attention-free (SSM): CoDec inapplicable")
+            continue
+        cm = CostModel(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                       page_size=PAGE)
+        f = tree_mod.two_level(32, 50_000 // PAGE * PAGE, 1024, PAGE)
+        r = codec_vs_flash(f, cm)
+        emit("fig13_models", arch, **r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 5: CoDec vs FlashDecoding attention execution time.
+
+Sweeps the paper's five workload axes (sequence length, batch size, tree
+depth, shared-prefix ratio, tree shape) and reports the cost-model
+makespans of the two plans on identical forests, plus the exact IO.
+The modeled speedup reproduces the paper's trends: bigger share -> bigger
+win; irregular (degenerate) trees win more than balanced ones.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import codec_vs_flash, emit, paper_cost_model
+from repro.core import tree as tree_mod
+
+PAGE = 64
+
+
+def main() -> None:
+    cm = paper_cost_model(PAGE)
+
+    # varying non-shared sequence length (binary depth-2 tree, 120k root)
+    for unique in (512, 1024, 2048, 4096, 8192):
+        f = tree_mod.two_level(32, 120_000 // PAGE * PAGE, unique, PAGE)
+        r = codec_vs_flash(f, cm)
+        emit("fig5_seqlen", f"unique{unique}", **r)
+
+    # varying batch size
+    for bs in (4, 8, 16, 32, 64, 128):
+        f = tree_mod.two_level(bs, 120_000 // PAGE * PAGE, 2048, PAGE)
+        r = codec_vs_flash(f, cm)
+        emit("fig5_batch", f"bs{bs}", **r)
+
+    # varying tree depth (full binary)
+    for depth in (2, 3, 4, 5, 6):
+        f = tree_mod.full_kary(depth, 2, 8192, PAGE)
+        r = codec_vs_flash(f, cm)
+        emit("fig5_depth", f"d{depth}", **r)
+
+    # varying shared ratio at fixed 120k context
+    for ratio in (0.5, 0.8, 0.9, 0.99):
+        f = tree_mod.shared_ratio(32, 120_000, ratio, PAGE)
+        r = codec_vs_flash(f, cm)
+        emit("fig5_ratio", f"r{ratio}", **r)
+
+    # varying tree shape (same per-node workload)
+    shapes = {"2T": tree_mod.full_kary(4, 2, 8192, PAGE),
+              "3T": tree_mod.full_kary(3, 3, 8192, PAGE),
+              "4T": tree_mod.full_kary(3, 4, 8192, PAGE),
+              "5T": tree_mod.full_kary(3, 5, 8192, PAGE),
+              "DT": tree_mod.degenerate(8, 8192, PAGE)}
+    for name, f in shapes.items():
+        r = codec_vs_flash(f, cm)
+        emit("fig5_shape", name, **r)
+
+
+if __name__ == "__main__":
+    main()

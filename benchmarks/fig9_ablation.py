@@ -1,0 +1,75 @@
+"""Paper Fig. 9: ablation — prefix tree / partitioning / parallel reduction.
+
+Configurations (cumulative, as in the paper):
+  base        : per-request plan, no division, single lane
+  +tree       : prefix-shared tasks, no division, single-lane scheduling
+  +partition  : + adaptive KV division (but naive round-robin lanes)
+  +parallel   : + LPT multi-lane scheduling and flattened reduction (full)
+
+Workloads: balanced full binary tree and unbalanced degenerate tree,
+both ~200k max context (the paper's setup).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, paper_cost_model
+from repro.core import plan as plan_mod, tree as tree_mod
+from repro.core.scheduler import (Schedule, SubTask, TaskSpec,
+                                  divide_and_schedule, lpt, naive_divide)
+
+PAGE = 64
+LANES = 8
+
+
+def _tasks(forest):
+    return [TaskSpec(n.id, len(n.requests), n.length)
+            for n in forest.real_nodes()]
+
+
+def _flash_tasks(forest):
+    out = []
+    for n in forest.real_nodes():
+        for qi in range(len(n.requests)):
+            out.append(TaskSpec(n.id * 10000 + qi, 1, n.length))
+    return out
+
+
+def _roundrobin(subs, lanes):
+    lane_cost = [0.0] * lanes
+    for i, s in enumerate(subs):
+        lane_cost[i % lanes] += s.cost
+    return max(lane_cost)
+
+
+def main() -> None:
+    cm = paper_cost_model(PAGE)
+    workloads = {
+        "balanced": tree_mod.full_kary(6, 2, 200_000 // 63 // PAGE * PAGE,
+                                       PAGE),
+        "degenerate": tree_mod.degenerate(12, 200_000 // 23 // PAGE * PAGE,
+                                          PAGE),
+    }
+    for wname, f in workloads.items():
+        base_subs = [SubTask(t.node_id, 0, t.n_q, 0, t.n, cm(t.n_q, t.n))
+                     for t in _flash_tasks(f)]
+        base = sum(s.cost for s in base_subs)          # sequential baseline
+
+        tree_subs = [SubTask(t.node_id, 0, t.n_q, 0, t.n, cm(t.n_q, t.n))
+                     for t in _tasks(f)]
+        tree_only = sum(s.cost for s in tree_subs)
+
+        sched = divide_and_schedule(_tasks(f), cm, LANES, PAGE,
+                                    max_kv_per_task=8192)
+        part_rr = _roundrobin(sched.subtasks, LANES)   # division, naive sched
+        full = sched.makespan                          # division + LPT
+
+        emit("fig9", wname,
+             base_ms=base * 1e3,
+             tree_ms=tree_only * 1e3,
+             partition_ms=part_rr * 1e3,
+             full_ms=full * 1e3,
+             total_speedup=base / max(full, 1e-12))
+
+
+if __name__ == "__main__":
+    main()

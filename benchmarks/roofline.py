@@ -1,0 +1,69 @@
+"""Roofline report: reads experiments/dryrun/*.json, prints the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+MODEL_FLOPS ratio) and the markdown used by EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(tag: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("tag", "") != tag:
+            continue
+        out.append(rec)
+    return out
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | t_compute | t_memory | t_collective "
+            "| dominant | useful | per-dev GiB | fits |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]), r["mesh"])
+    for r in sorted([c for c in cells if c["status"] == "ok"], key=key):
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute_s']:.3e} | {ro['t_memory_s']:.3e} "
+            f"| {ro['t_collective_s']:.3e} | {ro['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['per_device_bytes'] / 2**30:.2f} "
+            f"| {'y' if r['fits_hbm'] else 'n'} |")
+    for r in [c for c in cells if c["status"] == "skip"]:
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                    f"| — | — | — | skipped: {r['reason'][:40]} | | | |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    cells = load_cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    for r in ok:
+        ro = r["roofline"]
+        emit("roofline", f"{r['arch']}|{r['shape']}|{r['mesh']}",
+             t_compute_s=ro["t_compute_s"], t_memory_s=ro["t_memory_s"],
+             t_collective_s=ro["t_collective_s"],
+             dominant=ro["dominant"],
+             useful=r["useful_flops_ratio"],
+             per_dev_gib=r["per_device_bytes"] / 2**30)
+    print(f"\n# cells ok={len(ok)} skip={len(skip)}")
+    out = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(cells) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

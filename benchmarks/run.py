@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run [module ...]`` — runs all by default and
+prints ``bench,name,us_per_call,derived`` CSV lines.
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_cost_profile",   # Table 2
+    "fig5_exec_time",        # Fig. 5
+    "fig6_memory_access",    # Fig. 6
+    "fig7_e2e_tpot",         # Fig. 7
+    "fig8_multilevel",       # Fig. 8
+    "fig9_ablation",         # Fig. 9
+    "fig10_granularity",     # Fig. 10
+    "fig11_overhead",        # Fig. 11
+    "fig12_hardware",        # Fig. 12 (hardware sweep analogue)
+    "fig13_variants",        # Fig. 13
+    "roofline",              # EXPERIMENTS.md §Roofline source
+]
+
+
+def main() -> int:
+    mods = sys.argv[1:] or MODULES
+    print("bench,name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            importlib.import_module(f"benchmarks.{name}").main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        return 1
+    print("# all benchmarks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

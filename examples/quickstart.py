@@ -1,0 +1,55 @@
+"""Quickstart: the CoDec shared-prefix attention op in 60 lines.
+
+Builds a document-QA prefix forest (one shared doc, four questions),
+compiles a decode plan, and runs the attention three ways — the Pallas
+PAC kernel (interpret mode on CPU), the XLA plan implementation, and
+the python oracle — and shows the IO the plan saves vs FlashDecoding.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as plan_mod, tree as tree_mod
+from repro.core.cost_model import CostModel
+from repro.kernels import ops
+
+PAGE = 64
+N_REQ, DOC_LEN, Q_LEN = 4, 1024, 96
+H_Q, H_KV, D = 8, 2, 64          # GQA: 4 query heads per KV head
+
+# 1. the KV-cache forest: a shared doc node + one private tail per request
+forest = tree_mod.two_level(N_REQ, DOC_LEN, Q_LEN, block_size=PAGE)
+pool_pages = plan_mod.assign_dense_pages(forest)
+print(f"forest: {len(forest.real_nodes())} nodes, "
+      f"{forest.total_tokens()} stored tokens for "
+      f"{forest.total_context()} context tokens "
+      f"(mean sharing degree {forest.mean_sharing_degree():.2f})")
+
+# 2. compile the decode plan: cost estimation -> division -> LPT lanes
+cm = CostModel(H_Q, H_KV, D, page_size=PAGE)
+plan = plan_mod.build_plan(forest, cm, num_lanes=2, max_q=8)
+print(f"plan: {plan.stats()}")
+
+# 3. run the attention (paged KV pool layout = PagedAttention)
+key = jax.random.PRNGKey(0)
+kq, kk, kv = jax.random.split(key, 3)
+q = jax.random.normal(kq, (N_REQ, H_Q, D))              # one query/request
+k_pool = jax.random.normal(kk, (pool_pages, PAGE, H_KV, D))
+v_pool = jax.random.normal(kv, (pool_pages, PAGE, H_KV, D))
+
+out_pallas = ops.codec_attention(q, k_pool, v_pool, plan, impl="pallas")
+out_xla = ops.codec_attention(q, k_pool, v_pool, plan, impl="xla")
+out_ref = ops.codec_attention(q, k_pool, v_pool, plan, impl="ref")
+print("pallas vs ref max |err|:",
+      float(jnp.abs(out_pallas - out_ref).max()))
+print("xla    vs ref max |err|:",
+      float(jnp.abs(out_xla - out_ref).max()))
+
+# 4. what did prefix sharing buy? (paper Fig. 6 metric)
+io_codec = forest.codec_io_bytes(H_KV, D)
+io_flash = forest.flash_io_bytes(H_KV, D)
+print(f"KV bytes/step: codec {io_codec / 1e6:.2f} MB, "
+      f"flash-decoding {io_flash / 1e6:.2f} MB "
+      f"-> {io_flash / io_codec:.2f}x reduction")

@@ -1,0 +1,75 @@
+"""End-to-end driver: serve a small model with batched shared-prefix
+requests through the CoDec decode engine (the paper's deployment kind).
+
+Three question waves arrive against two shared documents (continuous
+batching); CoDec combines the shared KV reads, the plan is reused
+across steps, and the same run is repeated with the FlashDecoding
+backend to verify identical outputs and show the IO gap.
+
+    PYTHONPATH=src python examples/serve_docqa.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import DecodeEngine
+
+ARCH = "qwen2.5-14b"          # GQA family (reduced smoke config on CPU)
+cfg = smoke_config(ARCH)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+doc_a = rng.integers(0, cfg.vocab_size, 128).tolist()
+doc_b = rng.integers(0, cfg.vocab_size, 96).tolist()
+
+
+def questions(doc, n):
+    return [doc + rng.integers(0, cfg.vocab_size, 6).tolist()
+            for _ in range(n)]
+
+
+# fixed workload, shared by both backend runs
+WAVE1 = questions(doc_a, 3)
+WAVE2 = questions(doc_b, 2)
+WAVE3 = questions(doc_a, 2)
+
+
+def run(backend: str):
+    eng = DecodeEngine(cfg, params, page_size=16, num_pages=2048,
+                       backend=backend, max_q=16, temperature=0.0)
+    t0 = time.time()
+    # wave 1: three questions on doc A
+    for p in WAVE1:
+        eng.add_request(p, max_new=8)
+    for _ in range(3):
+        eng.step()
+    # wave 2 arrives mid-decode (continuous batching): doc B
+    for p in WAVE2:
+        eng.add_request(p, max_new=8)
+    # wave 3: more questions on doc A — its KV is already cached
+    for p in WAVE3:
+        eng.add_request(p, max_new=8)
+    eng.run(16)
+    dt = time.time() - t0
+    st = eng.stats
+    print(f"[{backend}] {len(eng.requests)} requests, "
+          f"{st['steps']} decode steps in {dt:.1f}s; "
+          f"prefill computed {st['prefill_tokens']} tokens "
+          f"(prompts total {3 * 134 + 2 * 102 + 2 * 134}); "
+          f"{st['replans']} replans, plan time {st['plan_time']:.3f}s")
+    io_c = eng.forest.codec_io_bytes(cfg.num_kv_heads, cfg.head_dim)
+    io_f = eng.forest.flash_io_bytes(cfg.num_kv_heads, cfg.head_dim)
+    print(f"    decode KV IO: {io_c / 1e3:.1f} KB/step vs "
+          f"{io_f / 1e3:.1f} KB/step per-request "
+          f"({io_f / io_c:.2f}x saved)")
+    return {r: req.generated for r, req in eng.requests.items()}
+
+
+out_codec = run("codec-pallas")
+out_flash = run("flash")
+assert out_codec == out_flash, "backends must produce identical tokens"
+print("codec outputs == flash outputs: OK")

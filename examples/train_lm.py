@@ -1,0 +1,64 @@
+"""Train a ~100M-parameter LM for a few hundred steps on CPU.
+
+Exercises the full training substrate end-to-end: sharded train step
+(1-device mesh here; the identical code lowers on the 512-chip mesh in
+the dry-run), deterministic data pipeline, cosine schedule, grad clip,
+checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.training import checkpoint as ckpt
+from repro.training import trainer
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import cosine_schedule, make_optimizer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/codec_train_lm")
+args = ap.parse_args()
+
+# ~100M params: gemma3-1b backbone, 6 layers, 16k vocab
+cfg = dataclasses.replace(
+    get_config("gemma3-1b"), name="gemma3-100m",
+    num_layers=6, vocab_size=16384, dtype="float32",
+    sliding_window=64)
+n_params = cfg.param_count()
+print(f"model: {cfg.name}, ~{n_params / 1e6:.0f}M params")
+
+opt = make_optimizer("adamw", cosine_schedule(3e-4, 20, args.steps))
+step_fn = jax.jit(trainer.make_train_step(cfg, opt, remat=False),
+                  donate_argnums=(0,))
+state = trainer.init_state(cfg, opt, jax.random.PRNGKey(0))
+
+start = 0
+restored = ckpt.load_latest(args.ckpt_dir, state)
+if restored:
+    start, state, _ = restored
+    print(f"resumed from step {start}")
+
+data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch),
+                   start_step=start)
+t0 = time.time()
+for step in range(start, args.steps):
+    toks, labels = data.batch(step)
+    state, m = step_fn(state, (jnp.asarray(toks), jnp.asarray(labels)))
+    if step % 25 == 0 or step == args.steps - 1:
+        print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+              f"gnorm {float(m['grad_norm']):.3f}  "
+              f"{(time.time() - t0) / max(step - start + 1, 1):.2f}s/step")
+    if step and step % 100 == 0:
+        ckpt.save_checkpoint(args.ckpt_dir, step, state)
+ckpt.save_checkpoint(args.ckpt_dir, args.steps, state)
+print(f"done in {time.time() - t0:.0f}s; final loss "
+      f"{float(m['loss']):.4f}")

@@ -1,0 +1,220 @@
+"""CoDec PAC (partial attention computation) Pallas TPU kernel.
+
+One ``pallas_call`` executes the *whole* inter-block schedule (paper §4.3):
+the grid is ``(num_lanes, max_steps)`` where a step processes one KV page
+of one subtask.  Lanes are the TPU's parallel slots (megacore halves /
+sharded cores) — ``dimension_semantics=("parallel", "arbitrary")`` — and
+the LPT scheduler balanced work across them; the step dimension executes
+sequentially so flash accumulators persist in VMEM scratch across a
+subtask's pages.
+
+Memory hierarchy mapping (GPU shared memory -> TPU VMEM):
+
+* K/V pages stream HBM->VMEM through BlockSpec index maps driven by a
+  scalar-prefetched page table — the Pallas pipeline double-buffers them;
+  *shared-prefix pages are fetched once per subtask regardless of how many
+  queries share them* (the paper's central IO saving).
+* The per-task query tile (pre-gathered, task-major) is fetched once per
+  subtask: consecutive steps with an unchanged block index skip the DMA.
+* GQA: Q is folded to ``(n_kv, n_q*group, d)`` so each KV head's page is
+  used by all of its query groups in a single MXU pass — the paper's
+  GQA-aware load combining.
+
+Outputs are *partial* results ``(o, m, l)`` per (task, query-slot); the
+tree reduction (ops.combine_partials) merges them per query.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VALUE = -1e30
+
+
+def _pac_kernel(
+    # scalar-prefetch refs (num_lanes, max_steps)
+    step_task, step_page, step_valid, step_first, step_last,
+    step_pos, step_kvlen,
+    # operand refs
+    q_ref,      # (1, max_q, h_q, d)
+    qpos_ref,   # (1, max_q)
+    k_ref,      # (1, page, n_kv, d)
+    v_ref,      # (1, page, n_kv, d)
+    # output refs
+    o_ref,      # (1, max_q, h_q, d) f32
+    m_ref,      # (1, max_q, h_q)   f32
+    l_ref,      # (1, max_q, h_q)   f32
+    # scratch
+    acc,        # (n_kv, max_q*group, d) f32
+    m_s,        # (n_kv, max_q*group)    f32
+    l_s,        # (n_kv, max_q*group)    f32
+    *,
+    n_kv: int,
+    group: int,
+    window: int,
+):
+    lane = pl.program_id(0)
+    step = pl.program_id(1)
+    valid = step_valid[lane, step] == 1
+    first = (step_first[lane, step] == 1) & valid
+    last = (step_last[lane, step] == 1) & valid
+
+    @pl.when(first)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    @pl.when(valid)
+    def _step():
+        max_q = q_ref.shape[1]
+        d = q_ref.shape[3]
+        page = k_ref.shape[1]
+        scale = 1.0 / np.sqrt(d)
+
+        q = q_ref[0].astype(jnp.float32)            # (max_q, h_q, d)
+        # fold GQA: head h = kv*group + g  ->  row = qi*group + g per kv
+        qf = (q.reshape(max_q, n_kv, group, d)
+                .transpose(1, 0, 2, 3)
+                .reshape(n_kv, max_q * group, d))
+        kf = k_ref[0].astype(jnp.float32).transpose(1, 0, 2)  # (n_kv, page, d)
+        vf = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)
+
+        s = jax.lax.dot_general(
+            qf, kf, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale       # (n_kv, R, page)
+
+        # visibility mask (§4.1): page padding + causality + sliding window
+        pos = step_pos[lane, step] + jax.lax.broadcasted_iota(
+            jnp.int32, (max_q, page), 1)                      # (max_q, page)
+        kvlen = step_kvlen[lane, step]
+        qp = qpos_ref[0][:, None]                             # (max_q, 1)
+        mask = (pos < step_pos[lane, step] + kvlen) & (pos <= qp)
+        if window > 0:
+            mask = mask & (pos > qp - window)
+        mask_r = (jnp.broadcast_to(mask[:, None, :], (max_q, group, page))
+                    .reshape(1, max_q * group, page))
+        mask_r = jnp.broadcast_to(mask_r, (n_kv, max_q * group, page))
+
+        s = jnp.where(mask_r, s, MASK_VALUE)
+        m_new = jnp.maximum(m_s[...], jnp.max(s, axis=-1))    # (n_kv, R)
+        p = jnp.exp(s - m_new[..., None]) * mask_r            # masked -> 0
+        alpha = jnp.exp(m_s[...] - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, vf, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)               # (n_kv, R, d)
+        acc[...] = acc[...] * alpha[..., None] + pv
+        m_s[...] = m_new
+
+    @pl.when(last)
+    def _finalize():
+        max_q = q_ref.shape[1]
+        d = q_ref.shape[3]
+        l_safe = jnp.maximum(l_s[...], 1e-30)
+        o = acc[...] / l_safe[..., None]                      # (n_kv, R, d)
+        # unfold GQA back to (max_q, h_q, ...)
+        o_ref[0] = (o.reshape(n_kv, max_q, group, d)
+                      .transpose(1, 0, 2, 3)
+                      .reshape(max_q, n_kv * group, d))
+        m_ref[0] = (m_s[...].reshape(n_kv, max_q, group)
+                      .transpose(1, 0, 2).reshape(max_q, n_kv * group))
+        l_ref[0] = (l_s[...].reshape(n_kv, max_q, group)
+                      .transpose(1, 0, 2).reshape(max_q, n_kv * group))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "interpret", "num_lanes", "max_steps"))
+def pac(q_tasks: jnp.ndarray,       # (T+1, max_q, h_q, d)
+        qpos_tasks: jnp.ndarray,    # (T+1, max_q) int32
+        k_pool: jnp.ndarray,        # (P, page, n_kv, d)
+        v_pool: jnp.ndarray,
+        step_task: jnp.ndarray,     # (num_lanes, max_steps) int32
+        step_page: jnp.ndarray,
+        step_valid: jnp.ndarray,
+        step_first: jnp.ndarray,
+        step_last: jnp.ndarray,
+        step_pos: jnp.ndarray,
+        step_kvlen: jnp.ndarray,
+        *,
+        window: int = 0,
+        interpret: bool = True,
+        num_lanes: int = 2,
+        max_steps: int = 1,
+        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run the PAC kernel over a compiled DecodePlan's step arrays.
+
+    Returns task-major partials ``(o, m, l)`` of shapes
+    ``(T+1, max_q, h_q, d)``, ``(T+1, max_q, h_q)``, ``(T+1, max_q, h_q)``.
+    """
+    Tp1, max_q, h_q, d = q_tasks.shape
+    _, page, n_kv, _ = k_pool.shape
+    group = h_q // n_kv
+    assert group * n_kv == h_q, (h_q, n_kv)
+
+    grid = (num_lanes, max_steps)
+
+    def q_index(lane, step, st, *_):
+        return (st[lane, step], 0, 0, 0)
+
+    def qpos_index(lane, step, st, *_):
+        return (st[lane, step], 0)
+
+    def kv_index(lane, step, st, sp, *_):
+        return (sp[lane, step], 0, 0, 0)
+
+    def out_index(lane, step, st, *_):
+        return (st[lane, step], 0, 0, 0)
+
+    def ml_index(lane, step, st, *_):
+        return (st[lane, step], 0, 0)
+
+    kernel = functools.partial(_pac_kernel, n_kv=n_kv, group=group,
+                               window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, max_q, h_q, d), q_index),
+            pl.BlockSpec((1, max_q), qpos_index),
+            pl.BlockSpec((1, page, n_kv, d), kv_index),
+            pl.BlockSpec((1, page, n_kv, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_q, h_q, d), out_index),
+            pl.BlockSpec((1, max_q, h_q), ml_index),
+            pl.BlockSpec((1, max_q, h_q), ml_index),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, max_q * group, d), jnp.float32),
+            pltpu.VMEM((n_kv, max_q * group), jnp.float32),
+            pltpu.VMEM((n_kv, max_q * group), jnp.float32),
+        ],
+    )
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((Tp1, max_q, h_q, d), jnp.float32),
+        jax.ShapeDtypeStruct((Tp1, max_q, h_q), jnp.float32),
+        jax.ShapeDtypeStruct((Tp1, max_q, h_q), jnp.float32),
+    ]
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(step_task, step_page, step_valid, step_first, step_last,
+      step_pos, step_kvlen,
+      q_tasks, qpos_tasks, k_pool, v_pool)
+    return o, m, l

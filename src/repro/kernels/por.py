@@ -1,0 +1,66 @@
+"""CoDec POR (partial output reduction) Pallas kernel (paper Alg. 3).
+
+Binary log-sum-exp merge of two partial-output sets belonging to the same
+queries.  The serving path normally uses the flattened segment reduction in
+``ops.combine_partials`` (one pass, maximal parallelism — our TPU-native
+form of the paper's parallel tree reduction), but the pairwise kernel is
+kept (a) as the literal paper primitive, property-tested for the
+associativity/commutativity the tree reduction relies on, and (b) for the
+cross-device sequence-parallel combine where exactly two partials meet.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _por_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
+                o_ref, m_ref, l_ref):
+    m1 = m1_ref[...]
+    m2 = m2_ref[...]
+    l1 = l1_ref[...]
+    l2 = l2_ref[...]
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * l1
+    a2 = jnp.exp(m2 - m) * l2
+    l = a1 + a2
+    l_safe = jnp.maximum(l, 1e-30)
+    o = (o1_ref[...] * a1[..., None] + o2_ref[...] * a2[..., None]) / l_safe[..., None]
+    o_ref[...] = o
+    m_ref[...] = m
+    l_ref[...] = l
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def por(o1: jnp.ndarray, m1: jnp.ndarray, l1: jnp.ndarray,
+        o2: jnp.ndarray, m2: jnp.ndarray, l2: jnp.ndarray,
+        *, block_rows: int = 128, interpret: bool = True,
+        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge partials. o*: (N, h, d) f32; m*/l*: (N, h) f32."""
+    n, h, d = o1.shape
+    block_rows = min(block_rows, n)
+    grid = (-(-n // block_rows),)
+
+    o_spec = pl.BlockSpec((block_rows, h, d), lambda i: (i, 0, 0))
+    ml_spec = pl.BlockSpec((block_rows, h), lambda i: (i, 0))
+
+    return pl.pallas_call(
+        _por_kernel,
+        grid=grid,
+        in_specs=[o_spec, ml_spec, ml_spec, o_spec, ml_spec, ml_spec],
+        out_specs=[o_spec, ml_spec, ml_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, h), jnp.float32),
+            jax.ShapeDtypeStruct((n, h), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(o1, m1, l1, o2, m2, l2)

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the
+device count at first init), and must not leak into tests/benchmarks —
+which is why this module is only ever run as a CLI.
+
+Per cell we record (to ``experiments/dryrun/<arch>__<shape>__<mesh>.json``):
+
+* ``compiled.memory_analysis()``  — per-device argument/output/temp bytes
+  (proves the sharding fits, or honestly reports when a config exceeds
+  a 16 GiB v5e HBM);
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline;
+* collective traffic parsed from the partitioned HLO (hlo_stats);
+* derived roofline terms (compute / memory / collective seconds) and
+  MODEL_FLOPS = 6*N*D (6*N_active*D for MoE).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all            # subprocess per cell
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+# TPU v5e per-chip constants (roofline denominators)
+PEAK_FLOPS = 197e12     # bf16 FLOP/s
+HBM_BW = 819e9          # B/s
+LINK_BW = 50e9          # B/s per ICI link
+HBM_BYTES = 16 * 2**30  # 16 GiB
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             microbatches: int = 1, remat: bool = True,
+             tag: str = "", ce_impl: str = "gather",
+             fsdp: bool = True, donate_cache: bool = False,
+             moe_groups: int = 1) -> dict:
+    import jax
+    from repro.configs import get_config, shape_supported, skip_reason
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "multi_pod": multi_pod, "tag": tag,
+           "microbatches": microbatches, "remat": remat,
+           "ce_impl": ce_impl, "fsdp": fsdp,
+           "donate_cache": donate_cache, "moe_groups": moe_groups}
+    if not shape_supported(cfg, shape_name):
+        rec.update(status="skip", reason=skip_reason(cfg, shape_name))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    opts = dict(microbatches=microbatches, remat=remat, ce_impl=ce_impl,
+                fsdp=fsdp, moe_groups=moe_groups)
+    cell = input_specs(arch, shape_name, mesh, **opts)
+    # donate the decode cache (serve_step args: params, tokens, cache,
+    # cache_len) / the train state — real deployments alias these
+    donate = ()
+    if donate_cache:
+        donate = (2,) if cell.kind == "decode" else (0,)
+    with mesh:
+        lowered = jax.jit(cell.step_fn,
+                          donate_argnums=donate).lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost_raw = hlo_stats.extract_cost(compiled)
+    mem = hlo_stats.extract_memory(compiled)
+    coll = hlo_stats.collect_collectives(compiled.as_text(), chips)
+
+    # --- exact cost accounting -----------------------------------------
+    # XLA's cost analysis counts while-loop (scan) bodies ONCE, so the
+    # full-model numbers above undercount by the period trip count.  We
+    # compile the same cell UNROLLED at k=1 and k=2 periods; every cost
+    # is affine in k, so extrapolate to the real period count.
+    P = cell.cfg.num_periods
+    t1 = time.time()
+    costs_k, colls_k = [], []
+    for k in (1, 2):
+        ck = input_specs(arch, shape_name, mesh, num_periods=k,
+                         unroll=True, **opts)
+        with mesh:
+            lk = jax.jit(ck.step_fn, donate_argnums=donate).lower(*ck.args)
+            comp_k = lk.compile()
+        costs_k.append(hlo_stats.extract_cost(comp_k))
+        colls_k.append(hlo_stats.collect_collectives(comp_k.as_text(),
+                                                     chips))
+        del lk, comp_k
+    t_extrap = time.time() - t1
+
+    def affine(v1, v2):
+        return v1 + (P - 1) * (v2 - v1)
+
+    cost = {key: affine(costs_k[0][key], costs_k[1][key])
+            for key in costs_k[0]}
+    coll_link = {op: affine(colls_k[0].link_bytes[op],
+                            colls_k[1].link_bytes[op])
+                 for op in colls_k[0].link_bytes}
+    coll_count = {op: round(affine(colls_k[0].count[op],
+                                   colls_k[1].count[op]))
+                  for op in colls_k[0].count}
+    total_link_bytes = sum(coll_link.values())
+
+    # roofline terms, per-device seconds (post-SPMD the compiled module
+    # is the per-partition program, so cost_analysis is per-chip —
+    # equal to HLO_total / chips in the assignment's formulation).
+    t_compute = cost["flops"] / PEAK_FLOPS
+    t_memory = cost["bytes_accessed"] / HBM_BW
+    t_collective = total_link_bytes / LINK_BW
+
+    N = cfg.param_count()
+    N_act = cfg.active_param_count()
+    sh = cell.shape
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 6.0 * N_act * tokens
+    elif sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 2.0 * N_act * tokens
+    else:
+        tokens = sh.global_batch  # one token per request
+        model_flops = 2.0 * N_act * tokens
+
+    per_dev_bytes = (mem["argument_size_in_bytes"]
+                     + mem["output_size_in_bytes"]
+                     - mem["alias_size_in_bytes"]
+                     + mem["temp_size_in_bytes"])
+    dominant = max([("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)], key=lambda kv: kv[1])[0]
+    rec.update(
+        status="ok", chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        extrap_s=round(t_extrap, 2),
+        cost=cost, cost_raw_scan=cost_raw, memory=mem,
+        collectives={"count": coll_count,
+                     "link_bytes": coll_link,
+                     "raw_scan_count": coll.count,
+                     "raw_scan_link_bytes": coll.link_bytes},
+        roofline={
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_collective,
+            "dominant": dominant,
+            "bound_s": max(t_compute, t_memory, t_collective),
+        },
+        model_flops=model_flops,
+        model_flops_per_chip=model_flops / chips,
+        useful_flops_ratio=(model_flops / chips) / max(cost["flops"], 1.0),
+        per_device_bytes=per_dev_bytes,
+        fits_hbm=bool(per_dev_bytes <= HBM_BYTES),
+    )
+    return rec
+
+
+def cell_filename(arch, shape, mesh_name, tag=""):
+    suffix = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh_name}{suffix}.json".replace("/", "_")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--ce-impl", default="gather",
+                    choices=["gather", "onehot"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--donate-cache", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ASSIGNED_ARCHS, PAPER_ARCH
+        from repro.configs.shapes import SHAPES
+        archs = ASSIGNED_ARCHS + [PAPER_ARCH]
+        meshes = [False, True]   # --all always covers both meshes
+        failures = []
+        for arch in archs:
+            for shape in SHAPES:
+                for mp in meshes:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    path = os.path.join(
+                        args.out, cell_filename(arch, shape, mesh_name,
+                                                args.tag))
+                    if os.path.exists(path):
+                        print(f"[skip-cached] {arch} {shape} {mesh_name}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out",
+                           args.out, "--tag", args.tag,
+                           "--microbatches", str(args.microbatches)]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    if args.no_remat:
+                        cmd.append("--no-remat")
+                    print(f"[run] {arch} {shape} {mesh_name} ...",
+                          flush=True)
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mesh_name))
+        if failures:
+            print("FAILED cells:", failures)
+            return 1
+        print("all cells OK")
+        return 0
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                       microbatches=args.microbatches,
+                       remat=not args.no_remat, tag=args.tag,
+                       ce_impl=args.ce_impl, fsdp=not args.no_fsdp,
+                       donate_cache=args.donate_cache,
+                       moe_groups=args.moe_groups)
+    except Exception:
+        traceback.print_exc()
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+               "tag": args.tag, "status": "error",
+               "error": traceback.format_exc()}
+        path = os.path.join(args.out, cell_filename(
+            args.arch, args.shape, mesh_name, args.tag))
+        with open(path + ".err", "w") as f:
+            json.dump(rec, f, indent=1)
+        return 1
+    path = os.path.join(args.out, cell_filename(
+        args.arch, args.shape, mesh_name, args.tag))
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"{args.arch} {args.shape} {mesh_name}: OK "
+              f"compute={r['t_compute_s']:.3e}s memory={r['t_memory_s']:.3e}s "
+              f"collective={r['t_collective_s']:.3e}s "
+              f"dominant={r['dominant']} "
+              f"per_dev={rec['per_device_bytes']/2**30:.2f}GiB "
+              f"fits_hbm={rec['fits_hbm']} "
+              f"useful={rec['useful_flops_ratio']:.3f}")
+    else:
+        print(f"{args.arch} {args.shape} {mesh_name}: "
+              f"{rec['status'].upper()} {rec.get('reason','')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Production mesh builders.
+
+A v5e pod is 16x16 = 256 chips; the production target is 2 pods = 512.
+Within a pod the mesh is (data=16, model=16): `model` maps to one torus
+dimension (TP/EP collectives stay on fast ICI rings), `data` to the
+other.  Multi-pod adds a leading `pod` axis — pure DP across pods so the
+only cross-DCN collective is the once-per-step gradient all-reduce.
+
+Defined as functions (never module-level constants) so importing this
+module cannot touch jax device state before the launcher has configured
+``xla_force_host_platform_device_count``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: Optional[int] = None, model: Optional[int] = None):
+    """Small mesh over whatever devices exist (tests / CPU trainers)."""
+    n = jax.device_count()
+    if data is None and model is None:
+        model = 1
+        data = n
+    elif data is None:
+        data = n // model
+    elif model is None:
+        model = n // data
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_sizes(mesh) -> Tuple[int, ...]:
+    return tuple(mesh.shape[a] for a in mesh.axis_names)

@@ -1,0 +1,91 @@
+"""Serving launcher: prefix-shared decode with the CoDec engine.
+
+Generates a synthetic document-QA workload (shared document prefix +
+per-request questions), serves it with the chosen attention backend, and
+reports TPOT + prefix-cache statistics.  ``--compare`` runs codec vs.
+the FlashDecoding baseline back-to-back (the paper's Fig. 7 setup).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --smoke --requests 4 --doc-len 256 --max-new 8 --compare
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default="codec-pallas",
+                    choices=["codec-pallas", "codec-xla", "flash"])
+    ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--doc-len", type=int, default=256)
+    ap.add_argument("--q-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import DecodeEngine
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.encoder_layers:
+        print("encoder-decoder archs are served via the decoder backbone "
+              "only; use a decoder-only arch for the engine demo")
+        return 1
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    doc = rng.integers(0, cfg.vocab_size, args.doc_len).tolist()
+    prompts = [doc + rng.integers(0, cfg.vocab_size, args.q_len).tolist()
+               for _ in range(args.requests)]
+
+    def run(backend: str):
+        eng = DecodeEngine(cfg, params, page_size=args.page_size,
+                           num_pages=8192, backend=backend,
+                           max_q=max(args.requests, 8), temperature=0.0)
+        t0 = time.time()
+        for p in prompts:
+            eng.add_request(p, max_new=args.max_new)
+        t_prefill = time.time() - t0
+        t0 = time.time()
+        outs = eng.run(args.max_new)
+        t_decode = time.time() - t0
+        steps = eng.stats["steps"]
+        io = eng.forest.codec_io_bytes(cfg.num_kv_heads, cfg.head_dim)
+        io_flash = eng.forest.flash_io_bytes(cfg.num_kv_heads, cfg.head_dim)
+        print(f"[{backend}] prefill {t_prefill:.2f}s "
+              f"({eng.stats['prefill_tokens']} new tokens; prefix reuse "
+              f"saved {sum(len(p) for p in prompts) - eng.stats['prefill_tokens']}), "
+              f"decode {t_decode:.2f}s / {steps} steps "
+              f"= TPOT {1000 * t_decode / max(steps, 1):.1f} ms, "
+              f"plan {eng.stats['plan_time']:.3f}s "
+              f"({eng.stats['replans']} replans)")
+        print(f"    KV IO per step: codec {io / 1e6:.2f} MB vs "
+              f"per-request {io_flash / 1e6:.2f} MB "
+              f"({io_flash / max(io, 1):.1f}x reduction, "
+              f"mean sharing degree {eng.forest.mean_sharing_degree():.1f})")
+        return outs
+
+    if args.compare:
+        o1 = run("codec-pallas")
+        o2 = run("flash")
+        match = o1 == o2
+        print(f"outputs codec == flash: {match}")
+        return 0 if match else 1
+    run(args.backend)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Returns the step function + fully-sharded abstract inputs, so the
+dry-run is a pure ``jit(step).lower(*specs).compile()`` — no allocation.
+
+``decode_*``/``long_*`` shapes lower ``serve_step`` (one new token
+against a dense seq_len cache); ``prefill_*`` lowers a last-logit
+forward; ``train_*`` lowers the full train step (fwd+bwd+optimizer).
+Frontend stubs: [audio] supplies precomputed encoder frame embeddings,
+[vlm] supplies prefix patch embeddings, per the assignment spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, shape_supported, skip_reason
+from ..configs.base import ModelConfig
+from ..configs.shapes import SHAPES, InputShape
+from ..models import transformer as T
+from ..training import optimizer as opt_mod
+from ..training import trainer
+from . import sharding as sh
+
+# archs whose optimizer state must be factored to fit HBM
+ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b", "llava-next-34b", "qwen1.5-32b",
+                   "jamba-v0.1-52b", "llama4-scout-17b-a16e"}
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: InputShape
+    step_fn: Callable
+    args: Tuple            # ShapeDtypeStructs with shardings attached
+    kind: str              # train | prefill | decode
+    cfg: ModelConfig
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _extras_fn(cfg: ModelConfig, mesh, batch: int) -> Optional[Callable]:
+    """Stub frontend inputs as a function of the token batch (jit-safe)."""
+    if cfg.frontend == "vision":
+        def fn(tokens):
+            B = tokens.shape[0]
+            return {"prefix_embeds": jnp.zeros(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.dtype(cfg.dtype))}
+        return fn
+    if cfg.frontend == "audio":
+        def fn(tokens):
+            B = tokens.shape[0]
+            return {"encoder_embeds": jnp.zeros(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.dtype(cfg.dtype))}
+        return fn
+    return None
+
+
+def make_optimizer_for(arch: str, cfg: ModelConfig):
+    kind = "adafactor" if arch in ADAFACTOR_ARCHS else "adamw"
+    sched = opt_mod.cosine_schedule(3e-4, warmup=100, total=10000)
+    return opt_mod.make_optimizer(kind, sched), kind
+
+
+def reduced_config(cfg: ModelConfig, num_periods: int) -> ModelConfig:
+    """Same arch with k periods (remainder layers kept): used by the
+    dry-run's cost extrapolation (cost is affine in the period count)."""
+    return dataclasses.replace(
+        cfg, num_layers=num_periods * cfg.period + cfg.remainder_layers)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *,
+                microbatches: int = 1, remat: bool = True,
+                num_periods: Optional[int] = None,
+                unroll: bool = False, ce_impl: str = "gather",
+                fsdp: bool = True, moe_groups: int = 1) -> CellSpec:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_supported(cfg, shape_name):
+        raise ValueError(
+            f"{arch} skips {shape_name}: {skip_reason(cfg, shape_name)}")
+    if num_periods is not None:
+        cfg = reduced_config(cfg, num_periods)
+    if moe_groups > 1 and cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_groups=moe_groups)
+
+    # activate activation-sharding constraints for this mesh (the step
+    # functions built below trace layers.hint against it)
+    from ..models import layers as L_mod
+    L_mod.set_activation_mesh(mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        optimizer, _ = make_optimizer_for(arch, cfg)
+        state_sds = trainer.abstract_state(cfg, optimizer)
+        p_shardings = sh.params_shardings(state_sds.params, mesh, cfg,
+                                          fsdp=fsdp)
+        opt_shardings = _opt_shardings(state_sds.opt_state, p_shardings,
+                                       mesh)
+        state = trainer.TrainState(
+            _sds((), jnp.int32, sh.replicated(mesh)),
+            sh.with_sharding(state_sds.params, p_shardings),
+            opt_shardings)
+        bsh = sh.batch_sharding(mesh, 2, B)
+        tokens = _sds((B, S), jnp.int32, bsh)
+        labels = _sds((B, S), jnp.int32, bsh)
+        step_fn = trainer.make_train_step(
+            cfg, optimizer, microbatches=microbatches, remat=remat,
+            extras_fn=_extras_fn(cfg, mesh, B), unroll=unroll,
+            ce_impl=ce_impl)
+        return CellSpec(arch, shape, step_fn, (state, (tokens, labels)),
+                        "train", cfg)
+
+    params_sds = jax.eval_shape(
+        lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+    p_shardings = sh.params_shardings(params_sds, mesh, cfg, fsdp=fsdp)
+    params = sh.with_sharding(params_sds, p_shardings)
+
+    if shape.kind == "prefill":
+        bsh = sh.batch_sharding(mesh, 2, B)
+        tokens = _sds((B, S), jnp.int32, bsh)
+        step_fn = trainer.make_prefill_step(cfg, _extras_fn(cfg, mesh, B),
+                                            unroll=unroll)
+        return CellSpec(arch, shape, step_fn, (params, tokens),
+                        "prefill", cfg)
+
+    # decode: one token against a dense cache of S tokens
+    enc_len = cfg.frontend_seq if cfg.cross_attention else 0
+    cache_sds = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, enc_len=enc_len))
+    c_shardings = sh.cache_shardings(cache_sds, mesh, cfg, B)
+    cache = sh.with_sharding(cache_sds, c_shardings)
+    bsh = sh.batch_sharding(mesh, 2, B)
+    tokens = _sds((B, 1), jnp.int32, bsh)
+    cache_len = _sds((B,), jnp.int32, sh.batch_sharding(mesh, 1, B))
+    step_fn = trainer.make_serve_step(cfg, unroll=unroll)
+    return CellSpec(arch, shape, step_fn, (params, tokens, cache, cache_len),
+                    "decode", cfg)
+
+
+def _opt_shardings(opt_like, p_shardings, mesh):
+    """SDS-with-shardings for optimizer state: reuse the param spec where
+    the slot mirrors the param (adamw m/v), drop factored axes for
+    adafactor vr/vc, replicate scalars."""
+
+    def walk(s, p_sh):
+        # adafactor leaf-slot dicts {vr, vc} / {v}
+        if isinstance(s, dict) and set(s) <= {"vr", "vc", "v"}:
+            out = {}
+            for k2, leaf in s.items():
+                ps = list(p_sh.spec)
+                ps += [None] * (len(ps) + 2)      # pad so slicing is safe
+                if k2 == "vr":      # param shape[:-1]
+                    spec = ps[:len(leaf.shape)]
+                elif k2 == "vc":    # param shape[:-2] + shape[-1:]
+                    n = len(leaf.shape)
+                    spec = ps[:n - 1] + [ps[n]] if n >= 1 else []
+                else:               # v mirrors the param
+                    spec = ps[:len(leaf.shape)]
+                out[k2] = _sds(leaf.shape, leaf.dtype,
+                               jax.sharding.NamedSharding(
+                                   mesh, jax.sharding.PartitionSpec(*spec)))
+            return out
+        if isinstance(s, dict):
+            return {k2: walk(v2, p_sh[k2]) for k2, v2 in s.items()}
+        if isinstance(s, (list, tuple)):
+            return type(s)(walk(v2, p_sh[i]) for i, v2 in enumerate(s))
+        return _sds(s.shape, s.dtype, p_sh)   # mirrors a param leaf
+
+    out = {}
+    for k, v in opt_like.items():
+        if k in ("m", "v", "slots"):
+            out[k] = walk(v, p_shardings)
+        else:
+            out[k] = jax.tree.map(
+                lambda s: _sds(s.shape, s.dtype, sh.replicated(mesh)), v)
+    return out
+
+
+def _flat(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_key(p), v) for p, v in leaves]
+
+
+def _key(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)

@@ -1,0 +1,215 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD for train/prefill (intra-chunk quadratic + inter-chunk
+associative scan over chunk states) and O(1) recurrent decode.  Group
+count G=1 (B/C shared across heads).  A naive token-recurrence reference
+is included for tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    S = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_dim = d_in + 2 * S
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * S + H   # z, xBC, dt
+    return {
+        "in_proj": {"w": (jax.random.normal(ks[0], (d, proj_out), jnp.float32)
+                          / np.sqrt(d)).astype(dtype)},
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) / np.sqrt(cfg.ssm_conv)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": {"w": (jax.random.normal(ks[2], (d_in, d), jnp.float32)
+                           / np.sqrt(d_in)).astype(dtype)},
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * S]
+    dt = zxbcdt[..., 2 * d_in + 2 * S:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. xBC: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = init_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)            # (B, T+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None] for i in range(K))
+    return jax.nn.silu((out + b[None, None]).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                eps: float) -> jnp.ndarray:
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (yf / rms * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. x: (B,T,H,P); dt: (B,T,H); A: (H,) negative;
+    Bm/Cm: (B,T,S).  Returns (y: (B,T,H,P), final_state: (B,H,P,S))."""
+    Bsz, T, H, P = x.shape
+    S = Bm.shape[-1]
+    Q = min(chunk, T)
+    nc = -(-T // Q)
+    pad = nc * Q - T
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtc = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, S)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, S)
+
+    dA = dtc * A[None, None, None, :]                   # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal) term: scores[i,j] = C_i.B_j e^{cum_i-cum_j} dt_j
+    cb = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)          # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, decay, 0.0) * dtc[:, :, None, :, :]       # (B,nc,i,j,H)
+    y_diag = jnp.einsum("bnij,bnijh,bnjhp->bnihp", cb, w, xf)
+
+    # chunk states: S_c = sum_j e^{cum_last - cum_j} dt_j B_j x_j^T
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc      # (B,nc,Q,H)
+    states = jnp.einsum("bnjs,bnjh,bnjhp->bnhps", Bc, w_end, xf)  # (B,nc,H,P,S)
+    gamma = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    # inter-chunk: associative scan  (g1,s1)*(g2,s2) = (g1g2, s1 g2 + s2)
+    def op(a, b):
+        g1, s1 = a
+        g2, s2 = b
+        return g1 * g2, s1 * g2[..., None, None] + s2
+
+    g_in, s_in = gamma, states
+    if init_state is not None:
+        s0 = init_state.astype(jnp.float32)[:, None]    # (B,1,H,P,S)
+        g0 = jnp.ones((Bsz, 1, H), jnp.float32)
+        g_in = jnp.concatenate([g0, gamma], 1)
+        s_in = jnp.concatenate([s0, states], 1)
+    g_sc, s_sc = jax.lax.associative_scan(op, (g_in, s_in), axis=1)
+    if init_state is not None:
+        states_incl = s_sc[:, 1:]
+        prev = s_sc[:, :-1]
+    else:
+        states_incl = s_sc
+        prev = jnp.concatenate(
+            [jnp.zeros_like(s_sc[:, :1]), s_sc[:, :-1]], 1)
+
+    # off-diagonal term: y_i += C_i . prev_state * e^{cum_i}
+    y_off = jnp.einsum("bnis,bnhps,bnih->bnihp", Cc, prev, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, P)
+    if pad:
+        y = y[:, :T]
+    return y.astype(x.dtype), states_incl[:, -1]
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence Mamba-2 block. x: (B,T,d).
+    Returns (y, (conv_state, ssm_state)) for decode continuation."""
+    B, T, _ = x.shape
+    d_in, S, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]["w"]
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    x_ssm = xBC[..., :d_in].reshape(B, T, H, P)
+    Bm = xBC[..., d_in:d_in + S]
+    Cm = xBC[..., d_in + S:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + x_ssm.astype(jnp.float32).astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, T, d_in)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]["w"]
+    K = cfg.ssm_conv
+    conv_state = xBC_raw[:, -(K - 1):].astype(jnp.float32)
+    if T < K - 1:
+        conv_state = jnp.concatenate(
+            [jnp.zeros((B, K - 1 - T, conv_state.shape[-1]), jnp.float32),
+             conv_state], 1)
+    return out, (conv_state, final_state)
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray,
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token recurrent step. x: (B,1,d); conv_state: (B,K-1,conv_dim);
+    ssm_state: (B,H,P,S)."""
+    B = x.shape[0]
+    d_in, S, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]["w"]
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"],
+                       init_state=conv_state)            # (B,1,conv_dim)
+    new_conv = jnp.concatenate(
+        [conv_state[:, 1:], xBC_raw.astype(jnp.float32)], 1)
+    x_ssm = xBC[..., :d_in].reshape(B, H, P)
+    Bm = xBC[:, 0, d_in:d_in + S]
+    Cm = xBC[:, 0, d_in + S:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A[None])                          # (B,H)
+    xs = x_ssm.astype(jnp.float32)
+    new_state = (ssm_state * dA[:, :, None, None]
+                 + dt1[:, :, None, None] * xs[..., None]
+                 * Bm.astype(jnp.float32)[:, None, None, :])
+    y = jnp.einsum("bhps,bs->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]["w"]
+    return out, (new_conv, new_state)
+
+
+def mamba_recurrent_ref(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                        ) -> jnp.ndarray:
+    """Token-by-token reference (oracle for ssd_chunked)."""
+    B, T, _ = x.shape
+    d_in, S = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    conv_dim = d_in + 2 * S
+    conv_state = jnp.zeros((B, K - 1, conv_dim), jnp.float32)
+    ssm_state = jnp.zeros((B, H, P, S), jnp.float32)
+    outs = []
+    for t in range(T):
+        y, (conv_state, ssm_state) = mamba_decode(
+            p, cfg, x[:, t:t + 1], conv_state, ssm_state)
+        outs.append(y)
+    return jnp.concatenate(outs, 1)

@@ -1,0 +1,517 @@
+"""Prefix-shared decode engine (the paper's vLLM-integration analogue).
+
+Continuous-batching decode loop with CoDec as the attention backend:
+
+* prompts are radix-inserted into a ``PrefixForest``; already-cached
+  nodes are *not* recomputed (prefill prefix reuse) — only the new leaf's
+  KV is computed, attending to the gathered cached prefix;
+* decode attention = **frozen CoDec plan** over all full pages (rebuilt
+  only when a leaf crosses a page boundary or batch membership changes —
+  the paper's "reuse a division plan for multiple decoding steps") POR-
+  merged with a **tail attention** over each request's growing last page;
+* KV pages live in a ``PagedKVPool``; pages of shared prefixes are
+  reference-counted and freed when the last request leaves;
+* Mamba layers (hybrid archs) keep per-request recurrent state, with
+  end-of-node state caching so shared prefixes are also not recomputed
+  for SSM mixers (the SSM analogue of prefix caching — see DESIGN.md §5);
+* backends: ``codec-pallas`` / ``codec-xla`` (prefix-shared) and
+  ``flash`` (per-request dense plan — the FlashDecoding baseline, used by
+  the paper's end-to-end comparison).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import LayerKind, ModelConfig
+from ..core import plan as plan_mod
+from ..core import tree as tree_mod
+from ..core.cost_model import CostModel
+from ..kernels import ops, pac as pac_mod, ref as ref_mod
+from ..models import layers as L
+from ..models import mamba as M
+from ..models import transformer as T
+from . import sampler
+from .kv_cache import PagedKVPool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    generated: List[int] = dataclasses.field(default_factory=list)
+    pending: Optional[int] = None      # sampled, not yet appended
+    max_new: int = 16
+    done: bool = False
+
+
+def flat_layers(cfg: ModelConfig, params) -> List[Tuple[LayerKind, Dict]]:
+    out = []
+    if cfg.num_periods > 0:
+        for pi in range(cfg.num_periods):
+            period = jax.tree.map(lambda x: x[pi], params["blocks"])
+            for i in range(cfg.period):
+                out.append((cfg.layer_pattern[i], period[f"sub{i}"]))
+    for i in range(cfg.remainder_layers):
+        out.append((cfg.layer_pattern[i], params["rem"][i]))
+    return out
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 page_size: int = 16, num_pages: int = 4096,
+                 backend: str = "codec-pallas",
+                 num_lanes: int = 2, max_q: int = 32,
+                 max_kv_per_task: int = 2048,
+                 replan_interval: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
+        self.cfg = cfg
+        self.params = params
+        self.backend = backend
+        self.page_size = page_size
+        self.num_lanes = num_lanes
+        self.max_q = max_q
+        self.max_kv_per_task = max_kv_per_task
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.layers = flat_layers(cfg, params)
+        self.attn_layer_idx = {j: a for a, j in enumerate(
+            j for j, (k, _) in enumerate(self.layers)
+            if k.mixer in ("attn", "attn_local"))}
+        n_attn = len(self.attn_layer_idx)
+        self.pool = PagedKVPool(max(n_attn, 1), num_pages, page_size,
+                                max(cfg.num_kv_heads, 1),
+                                max(cfg.head_dim, 1))
+        self.forest = tree_mod.PrefixForest(page_size)
+        self.requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self.cost_model = CostModel(max(cfg.num_heads, 1),
+                                    max(cfg.num_kv_heads, 1),
+                                    max(cfg.head_dim, 1),
+                                    page_size=page_size)
+        # mamba per-request state, keyed by layer index
+        self.mamba_state: Dict[int, Any] = {}
+        # plans keyed by window size (0 = full attention)
+        self._plans: Dict[int, Any] = {}
+        self._plan_dirty = True
+        self.replan_interval = replan_interval
+        self._steps_since_plan = 0
+        self.stats = {"steps": 0, "replans": 0, "plan_time": 0.0,
+                      "decode_time": 0.0, "prefill_tokens": 0}
+
+    # ------------------------------------------------------------------ #
+    # request admission / prefill with prefix reuse
+    # ------------------------------------------------------------------ #
+    def add_request(self, prompt: List[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.forest.insert_tokens(rid, np.asarray(prompt, np.int32))
+        req = Request(rid, list(prompt), max_new=max_new)
+        self.requests[rid] = req
+        self._ensure_pages(rid)
+        self._prefill(req)
+        self._plan_dirty = True
+        return rid
+
+    def _ensure_pages(self, rid: int) -> None:
+        """Allocate pages for any node on the path lacking them."""
+        for node in self.forest.path(rid):
+            need = -(-max(node.length, 1) // self.page_size)
+            if len(node.page_ids) < need:
+                node.page_ids += self.pool.allocator.alloc(
+                    need - len(node.page_ids))
+
+    def _gather_prefix(self, layer_attn: int, nodes) -> Tuple:
+        """Dense (ctx, n_kv, hd) for a list of filled nodes."""
+        ks, vs = [], []
+        for node in nodes:
+            k, v = self.pool.gather_context(layer_attn, node.page_ids,
+                                            node.length)
+            ks.append(k)
+            vs.append(v)
+        if not ks:
+            hkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim
+            z = jnp.zeros((0, hkv, hd), self.pool.k.dtype)
+            return z, z
+        return jnp.concatenate(ks, 0), jnp.concatenate(vs, 0)
+
+    def _prefill(self, req: Request) -> None:
+        """Compute KV (and SSM states) for the request's unfilled suffix.
+
+        Attention KV of filled prefix nodes is reused (gathered from the
+        paged pool); SSM layers resume from the deepest node boundary with
+        a cached state and states are (re-)cached at every node boundary
+        inside the recomputed span so later siblings resume exactly.
+        """
+        cfg = self.cfg
+        path = self.forest.path(req.rid)
+        filled_nodes, todo = [], []
+        for node in path:
+            if node.meta.get("filled", 0) >= node.length and node.length > 0:
+                filled_nodes.append(node)
+            elif node.length > 0:
+                todo.append(node)
+        if not todo:
+            # fully cached prompt: recompute the last node to get logits
+            todo = [filled_nodes.pop()] if filled_nodes else []
+        ctx_start = sum(n.length for n in filled_nodes)
+
+        has_mamba = any(k.mixer == "mamba" for k, _ in self.layers)
+        mamba_start = 0
+        mamba_init: Dict[int, Any] = {}
+        if has_mamba:
+            pos = 0
+            for node in filled_nodes:
+                pos += node.length
+                if "ssm" in node.meta:
+                    mamba_start, mamba_init = pos, node.meta["ssm"]
+        span_start = min(ctx_start, mamba_start) if has_mamba else ctx_start
+        tokens = np.asarray(req.prompt[span_start:], np.int32)
+        Tn = len(tokens)
+        self.stats["prefill_tokens"] += Tn
+        positions = (span_start + np.arange(Tn))[None]           # (1, Tn)
+
+        # node segments covering the span (for KV writes + state caching)
+        segments = []        # (node, lo, hi) in span-local coordinates
+        off = 0
+        for node in path:
+            lo = max(0, off - span_start)
+            hi = max(0, off + node.length - span_start)
+            if hi > lo:
+                segments.append((node, lo, hi))
+            off += node.length
+
+        x = T._embed(self.params, cfg, jnp.asarray(tokens)[None],
+                     jnp.asarray(positions))
+        prefix_nodes = [n for n in filled_nodes
+                        if n.end_pos <= span_start]   # attention KV to reuse
+
+        new_kv_writes = []  # (layer_attn, k (Tn,kv,hd), v)
+        for j, (kind, p) in enumerate(self.layers):
+            h = L.apply_norm(p["ln"], x, cfg)
+            if kind.mixer in ("attn", "attn_local"):
+                la = self.attn_layer_idx[j]
+                window = (cfg.sliding_window if kind.mixer == "attn_local"
+                          else 0)
+                q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
+                                                 jnp.asarray(positions))
+                pk, pv = self._gather_prefix(la, prefix_nodes)
+                k_all = jnp.concatenate([pk.astype(k_new.dtype)[None],
+                                         k_new], 1)
+                v_all = jnp.concatenate([pv.astype(v_new.dtype)[None],
+                                         v_new], 1)
+                o = L.mha(q, k_all, v_all, causal=True, window=window,
+                          softcap=cfg.attn_logit_softcap,
+                          q_positions=jnp.asarray(positions),
+                          kv_positions=jnp.arange(span_start + Tn)[None])
+                y = L.dense(p["attn"]["wo"],
+                            o.reshape(1, Tn, cfg.num_heads * cfg.head_dim))
+                new_kv_writes.append((la, k_new[0], v_new[0]))
+                x = x + y
+            elif kind.mixer == "mamba":
+                state = mamba_init.get(j)
+                ys = []
+                for node, lo, hi in segments:
+                    y_seg, state = self._mamba_prefill(p["mamba"],
+                                                       h[:, lo:hi], state)
+                    ys.append(y_seg)
+                    # cache the end-of-node state (shared nodes only; a
+                    # leaf's state keeps moving, cached per request below)
+                    if node.id != self.forest.leaf_of[req.rid]:
+                        node.meta.setdefault("ssm", {})[j] = state
+                y = jnp.concatenate(ys, 1)
+                self.mamba_state.setdefault(j, {})[req.rid] = state
+                x = x + y
+            if kind.ffn != "none":
+                h2 = L.apply_norm(p["ln2"], x, cfg)
+                if kind.ffn == "moe":
+                    y2, _ = L.apply_moe(p["ffn"], cfg, h2)
+                else:
+                    y2 = L.apply_mlp(p["ffn"], cfg, h2)
+                x = x + y2
+
+        # write new KV into unfilled pages only
+        offs, pages, kv_rows = [], [], []
+        for node, lo, hi in segments:
+            start = max(node.meta.get("filled", 0), 0)
+            node_lo_global = span_start + lo  # == node.start_pos
+            for t in range(node.length):
+                if t < start:
+                    continue
+                if lo + t >= hi:
+                    break
+                pages.append(node.page_ids[t // self.page_size])
+                offs.append(t % self.page_size)
+                kv_rows.append(lo + t)
+            node.meta["filled"] = node.length
+        if kv_rows:
+            rows = jnp.asarray(np.asarray(kv_rows))
+            for la, k_new, v_new in new_kv_writes:
+                self.pool.write_tokens(la, np.asarray(pages),
+                                       np.asarray(offs),
+                                       k_new[rows], v_new[rows])
+        logits = T._unembed(self.params, cfg, x)[0, -1]
+        self.key, sk = jax.random.split(self.key)
+        req.pending = int(sampler.sample(logits[None], sk,
+                                         self.temperature)[0])
+
+    def _mamba_prefill(self, p, h, init):
+        cfg = self.cfg
+        if init is None:
+            return M.mamba_forward(p, cfg, h)
+        conv0, ssm0 = init
+        # run chunked SSD from a carried state
+        zxbcdt = h @ p["in_proj"]["w"]
+        z, xBC_raw, dt = M._split_proj(cfg, zxbcdt)
+        xBC = M._causal_conv(xBC_raw, p["conv_w"], p["conv_b"],
+                             init_state=conv0)
+        d_in, S = cfg.d_inner, cfg.ssm_state
+        B, Tn = h.shape[0], h.shape[1]
+        x_ssm = xBC[..., :d_in].reshape(B, Tn, cfg.ssm_heads,
+                                        cfg.ssm_head_dim)
+        Bm = xBC[..., d_in:d_in + S]
+        Cm = xBC[..., d_in + S:]
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, final = M.ssd_chunked(x_ssm, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                 init_state=ssm0)
+        y = y + x_ssm.astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+        y = y.reshape(B, Tn, d_in)
+        y = M._gated_norm(y, z, p["norm"], cfg.norm_eps)
+        out = y @ p["out_proj"]["w"]
+        K = cfg.ssm_conv
+        conv_tail = jnp.concatenate([conv0, xBC_raw.astype(jnp.float32)],
+                                    1)[:, -(K - 1):]
+        return out, (conv_tail, final)
+
+    # ------------------------------------------------------------------ #
+    # plan management
+    # ------------------------------------------------------------------ #
+    def _windows(self) -> List[int]:
+        ws = set()
+        for kind, _ in self.layers:
+            if kind.mixer == "attn":
+                ws.add(0)
+            elif kind.mixer == "attn_local":
+                ws.add(self.cfg.sliding_window)
+        return sorted(ws)
+
+    def _active_rows(self) -> List[int]:
+        return [r for r in sorted(self.requests)
+                if not self.requests[r].done]
+
+    def _rebuild_plans(self) -> None:
+        t0 = time.perf_counter()
+        rows = self._active_rows()
+        req_rows = {r: i for i, r in enumerate(rows)}
+        ps = self.page_size
+        truncate = {}
+        self._tail_info = []   # per row: (node, tail_start_local)
+        for r in rows:
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            tail_start = max(0, ((leaf.length - 1) // ps) * ps)
+            truncate[leaf.id] = tail_start
+            self._tail_info.append((leaf, tail_start))
+        self._plans = {}
+        for w in self._windows():
+            p = plan_mod.build_plan(
+                self.forest, self.cost_model, self.num_lanes, self.max_q,
+                self.max_kv_per_task, req_rows=req_rows, window=w,
+                truncate=truncate)
+            p = plan_mod.pad_plan(p)
+            self._plans[w] = (p, ops.plan_arrays(p))
+        self._rows = rows
+        self._plan_dirty = False
+        self._steps_since_plan = 0
+        self.stats["replans"] += 1
+        self.stats["plan_time"] += time.perf_counter() - t0
+
+    def _advance_qpos(self) -> None:
+        """Cheap per-step plan refresh: live queries moved one position."""
+        for w, (p, _) in list(self._plans.items()):
+            slot = np.arange(p.max_q)[None, :]
+            live = slot < p.task_qnum[:, None]
+            p.q_pos = p.q_pos + live.astype(np.int32)
+            self._plans[w] = (p, ops.plan_arrays(p))
+
+    # ------------------------------------------------------------------ #
+    # decode step
+    # ------------------------------------------------------------------ #
+    def step(self) -> Dict[int, int]:
+        """Append pending tokens, decode one new token per active request."""
+        cfg = self.cfg
+        rows = self._active_rows()
+        if not rows:
+            return {}
+        t0 = time.perf_counter()
+        # 1. append pending tokens to leaves (grow pages as needed)
+        tokens = []
+        for r in rows:
+            req = self.requests[r]
+            tok = req.pending
+            self.forest.append_token(r, tok)
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            if -(-leaf.length // self.page_size) > len(leaf.page_ids):
+                leaf.page_ids += self.pool.allocator.alloc(1)
+                self._plan_dirty = True
+            tokens.append(tok)
+        if (self.replan_interval is not None
+                and self._steps_since_plan >= self.replan_interval):
+            self._plan_dirty = True
+        if self._plan_dirty or rows != getattr(self, "_rows", None):
+            self._rebuild_plans()
+        else:
+            self._advance_qpos()
+        self._steps_since_plan += 1
+
+        B = len(rows)
+        ctx = np.array([self.forest.context_len(r) for r in rows], np.int32)
+        q_pos = jnp.asarray(ctx - 1)
+        x = T._embed(self.params, cfg, jnp.asarray(tokens)[None].T,
+                     q_pos[:, None])                       # (B,1,d)
+
+        # tail page info
+        tail_pages, tail_base, tail_off = [], [], []
+        for i, r in enumerate(rows):
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            tp = (leaf.length - 1) // self.page_size
+            tail_pages.append(leaf.page_ids[tp])
+            tail_base.append(leaf.start_pos + tp * self.page_size)
+            tail_off.append((leaf.length - 1) % self.page_size)
+        tail_pages = np.asarray(tail_pages)
+        tail_base = jnp.asarray(np.asarray(tail_base))
+        tail_off = np.asarray(tail_off)
+
+        for j, (kind, p) in enumerate(self.layers):
+            h = L.apply_norm(p["ln"], x, cfg)
+            if kind.mixer in ("attn", "attn_local"):
+                la = self.attn_layer_idx[j]
+                window = (cfg.sliding_window if kind.mixer == "attn_local"
+                          else 0)
+                q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
+                                                 q_pos[:, None])
+                self.pool.write_tokens(la, tail_pages, tail_off,
+                                       k_new[:, 0], v_new[:, 0])
+                k_pool, v_pool = self.pool.layer_pools(la)
+                qb = q[:, 0]                                # (B, h, hd)
+                o = self._attend(qb, k_pool, v_pool, window, B,
+                                 tail_pages, tail_base, q_pos)
+                y = L.dense(p["attn"]["wo"],
+                            o.reshape(B, 1, cfg.num_heads * cfg.head_dim))
+                x = x + y
+            elif kind.mixer == "mamba":
+                states = self.mamba_state[j]
+                conv = jnp.concatenate([states[r][0] for r in rows], 0)
+                ssm = jnp.concatenate([states[r][1] for r in rows], 0)
+                y, (conv_n, ssm_n) = M.mamba_decode(p["mamba"], cfg, h,
+                                                    conv, ssm)
+                for i, r in enumerate(rows):
+                    states[r] = (conv_n[i:i + 1], ssm_n[i:i + 1])
+                x = x + y
+            if kind.ffn != "none":
+                h2 = L.apply_norm(p["ln2"], x, cfg)
+                if kind.ffn == "moe":
+                    y2, _ = L.apply_moe(p["ffn"], cfg, h2)
+                else:
+                    y2 = L.apply_mlp(p["ffn"], cfg, h2)
+                x = x + y2
+
+        logits = T._unembed(self.params, cfg, x)[:, 0]      # (B, V)
+        self.key, sk = jax.random.split(self.key)
+        toks = np.asarray(sampler.sample(logits, sk, self.temperature))
+        out = {}
+        for i, r in enumerate(rows):
+            req = self.requests[r]
+            req.generated.append(int(tokens[i]))
+            req.pending = int(toks[i])
+            out[r] = int(toks[i])
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self._plan_dirty = True
+        self.stats["steps"] += 1
+        self.stats["decode_time"] += time.perf_counter() - t0
+        return out
+
+    def _attend(self, qb, k_pool, v_pool, window, B,
+                tail_pages, tail_base, q_pos):
+        cfg = self.cfg
+        if self.backend == "flash":
+            plan, pa = self._flash_plan(window)
+        else:
+            plan, pa = self._plans[window]
+        impl = "xla" if self.backend.endswith("xla") else "pallas"
+        # frozen part
+        q_tasks = ops.gather_queries(qb, pa.q_gather)
+        if impl == "pallas":
+            o_p, m_p, l_p = pac_mod.pac(
+                q_tasks, pa.q_pos, k_pool, v_pool,
+                pa.step_task, pa.step_page, pa.step_valid, pa.step_first,
+                pa.step_last, pa.step_pos, pa.step_kvlen,
+                window=window, interpret=True,
+                num_lanes=pa.step_task.shape[0],
+                max_steps=pa.step_task.shape[1])
+        else:
+            o_p, m_p, l_p = ops.pac_xla(q_tasks, pa.q_pos, k_pool, v_pool,
+                                        pa.task_pages, pa.task_kvlen,
+                                        pa.task_pos, window=window)
+        slot = jnp.arange(pa.q_gather.shape[1])[None, :]
+        live = slot < pa.task_qnum[:, None]
+        m_p = jnp.where(live[..., None], m_p, -1e30)
+        l_p = jnp.where(live[..., None], l_p, 0.0)
+        o_p = jnp.where(live[..., None, None], o_p, 0.0)
+        o_f, m_f, l_f = ops.combine_partials_stats(
+            o_p, m_p, l_p, pa.seg_ids, plan.num_queries)
+        # tail part
+        kt = k_pool[jnp.asarray(tail_pages)]
+        vt = v_pool[jnp.asarray(tail_pages)]
+        o_t, m_t, l_t = ops.single_page_attention(
+            qb, kt, vt, tail_base, q_pos, window=window)
+        o, _, _ = ref_mod.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
+        return o.astype(qb.dtype)
+
+    def _flash_plan(self, window):
+        """Per-request (non-shared) baseline plan, rebuilt with the same
+        cadence as the codec plans."""
+        key = ("flash", window)
+        if key not in self._plans:
+            rows = self._rows
+            req_rows = {r: i for i, r in enumerate(rows)}
+            truncate = {leaf.id: ts for leaf, ts in self._tail_info}
+            p = plan_mod.flash_plan(
+                self.forest, self.cost_model, self.num_lanes, self.max_q,
+                self.max_kv_per_task, req_rows=req_rows, window=window,
+                truncate=truncate)
+            p = plan_mod.pad_plan(p)
+            self._plans[key] = (p, ops.plan_arrays(p))
+        return self._plans[key]
+
+    # ------------------------------------------------------------------ #
+    def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return {r: req.generated for r, req in self.requests.items()}
+
+    def release(self, rid: int) -> None:
+        req = self.requests.pop(rid)
+        leaf = self.forest.leaf_of[rid]
+        # pages of nodes used only by this request are freed
+        for node in reversed(self.forest.path(rid)):
+            node.requests.remove(rid)
+            if not node.requests and not node.children:
+                self.pool.allocator.release(node.page_ids)
+                parent = self.forest.nodes[node.parent]
+                parent.children.remove(node.id)
+                del self.forest.nodes[node.id]
+        del self.forest.leaf_of[rid]
+        for st in self.mamba_state.values():
+            st.pop(rid, None)
+        self._plan_dirty = True

@@ -1,0 +1,88 @@
+"""Paged KV-cache pool + page allocator (PagedAttention layout, paper §4.1/§6).
+
+The pool holds all attention layers' KV pages:
+``k/v: (n_attn_layers, num_pages, page_size, n_kv, head_dim)``.
+Pages are allocated from a free list with reference counts so prefix nodes
+shared by multiple requests are freed only when the last request releases
+them.  The forest nodes record their ``page_ids``; the plan compiler reads
+them directly — the CoDec kernel follows this exact layout.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refs: Dict[int, int] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def retain(self, pages: List[int]) -> None:
+        for p in pages:
+            self._refs[p] += 1
+
+    def release(self, pages: List[int]) -> None:
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+
+class PagedKVPool:
+    """Device-resident paged pool for all attention layers."""
+
+    def __init__(self, n_layers: int, num_pages: int, page_size: int,
+                 n_kv: int, head_dim: int, dtype=jnp.float32):
+        self.n_layers = n_layers
+        self.page_size = page_size
+        self.k = jnp.zeros((n_layers, num_pages, page_size, n_kv, head_dim),
+                           dtype)
+        self.v = jnp.zeros_like(self.k)
+        self.allocator = PageAllocator(num_pages)
+
+    def layer_pools(self, layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.k[layer], self.v[layer]
+
+    def write_tokens(self, layer: int, pages: np.ndarray, offsets: np.ndarray,
+                     k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+        """Scatter n tokens into (page, offset) slots of one layer.
+
+        pages/offsets: (n,); k_new/v_new: (n, n_kv, head_dim).
+        """
+        li = jnp.full(pages.shape, layer, jnp.int32)
+        pg = jnp.asarray(pages, jnp.int32)
+        of = jnp.asarray(offsets, jnp.int32)
+        self.k = self.k.at[li, pg, of].set(k_new.astype(self.k.dtype))
+        self.v = self.v.at[li, pg, of].set(v_new.astype(self.v.dtype))
+
+    def gather_context(self, layer: int, pages: List[int], length: int,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Dense (length, n_kv, hd) view of a page run (prefill reuse)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        ps = self.page_size
+        k = self.k[layer, idx].reshape(len(pages) * ps, *self.k.shape[3:])
+        v = self.v[layer, idx].reshape(len(pages) * ps, *self.v.shape[3:])
+        return k[:length], v[:length]
+
+    def bytes_used(self) -> int:
+        return int(self.k.size + self.v.size) * self.k.dtype.itemsize

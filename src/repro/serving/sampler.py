@@ -1,0 +1,19 @@
+"""Token samplers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32 token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1][:, None]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, -1).astype(jnp.int32)

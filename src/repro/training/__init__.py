@@ -1,0 +1,1 @@
+from . import checkpoint, data, optimizer, trainer  # noqa: F401

@@ -1,0 +1,165 @@
+"""Optimizers (optax-style init/update pairs, no external deps).
+
+AdamW for normal archs; Adafactor (factored second moment, no first
+moment) for the trillion-param MoE where full Adam state would exceed the
+512-chip HBM budget.  Plus: global-norm clipping, cosine schedule with
+warmup, and an int8 gradient-compression transform (error feedback) for
+the cross-pod data-parallel all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(np.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def adamw(schedule: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr = schedule(count)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), m_new.astype(state_dtype), \
+                v_new.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adafactor(schedule: Callable, decay: float = 0.8, eps: float = 1e-30,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern): O(n+m) state for
+    an (n, m) matrix — the only way 1T params fit the 512-chip budget."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr = schedule(count)
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def one(g, slot, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * slot["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * slot["vc"] + (1 - beta) * g2.mean(-2)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                step = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                            + 1e-9)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                step = g / (jnp.sqrt(v) + 1e-9)
+                new_slot = {"v": v}
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), new_slot
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["slots"])
+        flat_p = jax.tree.leaves(params)
+        ups, slots = [], []
+        for g, s, p in zip(flat_g, flat_s, flat_p):
+            u, ns = one(g, s, p)
+            ups.append(u)
+            slots.append(ns)
+        return (jax.tree.unflatten(treedef, ups),
+                {"slots": jax.tree.unflatten(treedef, slots), "count": count})
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, schedule: Callable, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------- #
+# gradient compression (cross-pod DP all-reduce)
+# --------------------------------------------------------------------- #
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize g+err to int8 with per-tensor scale; returns (q, scale,
+    new_err).  Used before the cross-pod (DCN) all-reduce: 4x fewer bytes
+    on the slowest link; error feedback keeps the scheme unbiased over
+    steps."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

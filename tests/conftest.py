@@ -1,0 +1,55 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone forces 512);
+# make sure a leaked XLA_FLAGS can't change test semantics.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_pool(forest, n_kv, d, key=0, dtype=None):
+    """Random paged KV pool covering a forest (after assign_dense_pages)."""
+    import jax.numpy as jnp
+    from repro.core import plan as plan_mod
+    pages = plan_mod.assign_dense_pages(forest)
+    ps = forest.block_size
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    dt = dtype or jnp.float32
+    k_pool = jax.random.normal(k1, (pages, ps, n_kv, d), dt)
+    v_pool = jax.random.normal(k2, (pages, ps, n_kv, d), dt)
+    return k_pool, v_pool
+
+
+def dense_from_pool(forest, k_pool, v_pool):
+    """Gather per-request dense (B, L, n_kv, d) KV from a paged pool."""
+    import numpy as np
+    ps = forest.block_size
+    reqs = forest.request_ids
+    lens = [forest.context_len(r) for r in reqs]
+    L = max(lens)
+    n_kv, d = k_pool.shape[2], k_pool.shape[3]
+    kd = np.zeros((len(reqs), L, n_kv, d), np.float32)
+    vd = np.zeros((len(reqs), L, n_kv, d), np.float32)
+    for i, r in enumerate(reqs):
+        pos = 0
+        for node in forest.path(r):
+            for j, pg in enumerate(node.page_ids):
+                take = min(ps, node.length - j * ps)
+                if take <= 0:
+                    continue
+                kd[i, pos:pos + take] = np.asarray(k_pool[pg])[:take]
+                vd[i, pos:pos + take] = np.asarray(v_pool[pg])[:take]
+                pos += take
+    return kd, vd, np.asarray(lens, np.int32)

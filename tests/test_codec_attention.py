@@ -1,0 +1,130 @@
+"""End-to-end shared-prefix attention: every impl vs the dense oracle,
+over randomly generated forests (the system-level property test)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model, plan as plan_mod, tree as tree_mod
+from repro.kernels import ops, ref
+
+from conftest import dense_from_pool, make_pool
+
+PAGE = 16
+CM = cost_model.CostModel(4, 2, 16, page_size=PAGE)
+
+
+@st.composite
+def forests(draw):
+    """Random forest: a few roots, random chains, random sharing."""
+    f = tree_mod.PrefixForest(PAGE)
+    n_roots = draw(st.integers(1, 3))
+    rid = 0
+    for _ in range(n_roots):
+        root_len = draw(st.integers(1, 4)) * PAGE
+        root = f._new_node(tree_mod.ROOT_ID, root_len, 0)
+        n_children = draw(st.integers(1, 3))
+        for _ in range(n_children):
+            depth = draw(st.integers(0, 2))
+            cur = root
+            for _ in range(depth):
+                cur = f._new_node(cur.id, draw(st.integers(1, 2)) * PAGE,
+                                  cur.end_pos)
+            leaf = f._new_node(cur.id, draw(st.integers(1, 2 * PAGE)),
+                               cur.end_pos)
+            f.attach_request(rid, leaf.id)
+            rid += 1
+    return f
+
+
+@given(forests(), st.sampled_from(["xla", "ref"]))
+@settings(max_examples=25, deadline=None)
+def test_codec_matches_dense_oracle(f, impl):
+    f.validate()
+    B = len(f.request_ids)
+    k_pool, v_pool = make_pool(f, 2, 16)
+    p = plan_mod.build_plan(f, CM, num_lanes=2, max_q=8,
+                            max_kv_per_task=2 * PAGE)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, 4, 16))
+    out = ops.codec_attention(q, k_pool, v_pool, p, impl=impl)
+    kd, vd, lens = dense_from_pool(f, k_pool, v_pool)
+    expect = ref.decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                                      jnp.asarray(lens))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@given(forests())
+@settings(max_examples=8, deadline=None)
+def test_pallas_impl_matches_xla(f):
+    B = len(f.request_ids)
+    k_pool, v_pool = make_pool(f, 2, 16)
+    p = plan_mod.build_plan(f, CM, num_lanes=2, max_q=8)
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 4, 16))
+    o_x = ops.codec_attention(q, k_pool, v_pool, p, impl="xla")
+    o_p = ops.codec_attention(q, k_pool, v_pool, p, impl="pallas")
+    np.testing.assert_allclose(o_p, o_x, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_plan_is_prefix_blind_but_correct():
+    """The FlashDecoding-style plan reads shared KV once per request —
+    more IO, identical numerics."""
+    f = tree_mod.two_level(4, 4 * PAGE, PAGE, PAGE)
+    k_pool, v_pool = make_pool(f, 2, 16)
+    pc = plan_mod.build_plan(f, CM, num_lanes=2, max_q=8)
+    pf = plan_mod.flash_plan(f, CM, num_lanes=2, max_q=8)
+    # flash plan: every task single-query
+    assert int(pf.task_qnum[:pf.num_tasks].max()) == 1
+    # flash plan reads more pages in total
+    assert pf.step_valid.sum() > pc.step_valid.sum()
+    q = jax.random.normal(jax.random.PRNGKey(3), (4, 4, 16))
+    o_c = ops.codec_attention(q, k_pool, v_pool, pc, impl="xla")
+    o_f = ops.codec_attention(q, k_pool, v_pool, pf, impl="xla")
+    np.testing.assert_allclose(o_c, o_f, rtol=1e-5, atol=1e-5)
+
+
+def test_pad_plan_is_numerically_invisible():
+    f = tree_mod.two_level(3, 2 * PAGE, PAGE, PAGE)
+    k_pool, v_pool = make_pool(f, 2, 16)
+    p = plan_mod.build_plan(f, CM, num_lanes=2, max_q=8)
+    pp = plan_mod.pad_plan(p, steps=p.max_steps + 5,
+                           tasks=p.task_qnum.shape[0] + 3)
+    q = jax.random.normal(jax.random.PRNGKey(4), (3, 4, 16))
+    o1 = ops.codec_attention(q, k_pool, v_pool, p, impl="xla")
+    o2 = ops.codec_attention(q, k_pool, v_pool, pp, impl="xla")
+    o3 = ops.codec_attention(q, k_pool, v_pool, pp, impl="pallas")
+    np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(o1, o3, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_segment_reduction_equals_pairwise_por(n_parts, seed):
+    """The flattened segment LSE == any order of pairwise POR merges
+    (associativity/commutativity, paper §4.3)."""
+    h, d, nq = 2, 8, 3
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3 * n_parts)
+    parts = []
+    for i in range(n_parts):
+        o = jax.random.normal(ks[3 * i], (nq, h, d))
+        m = jax.random.normal(ks[3 * i + 1], (nq, h)) * 2
+        l = jnp.abs(jax.random.normal(ks[3 * i + 2], (nq, h))) + 0.1
+        parts.append((o, m, l))
+    # pairwise left fold
+    o, m, l = parts[0]
+    for o2, m2, l2 in parts[1:]:
+        o, m, l = ref.por_ref(o, m, l, o2, m2, l2)
+    # pairwise reversed fold
+    o_r, m_r, l_r = parts[-1]
+    for o2, m2, l2 in reversed(parts[:-1]):
+        o_r, m_r, l_r = ref.por_ref(o_r, m_r, l_r, o2, m2, l2)
+    np.testing.assert_allclose(o, o_r, rtol=1e-5, atol=1e-5)
+    # segment reduction over all parts at once
+    o_parts = jnp.concatenate([p[0] for p in parts], 0)
+    m_parts = jnp.concatenate([p[1] for p in parts], 0)
+    l_parts = jnp.concatenate([p[2] for p in parts], 0)
+    segs = jnp.tile(jnp.arange(nq), n_parts)
+    o_seg = ref.combine_partials_ref(o_parts, m_parts, l_parts, segs, nq)
+    np.testing.assert_allclose(o_seg, o, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,133 @@
+"""Property tests on the prefix forest (paper §4.1 structures)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as tree_mod
+
+
+# --------------------------------------------------------------------- #
+# radix insertion
+# --------------------------------------------------------------------- #
+@st.composite
+def prompt_sets(draw):
+    """Prompts with controlled shared structure."""
+    bs = draw(st.integers(4, 64))
+    n_docs = draw(st.integers(1, 3))
+    docs = [draw(st.lists(st.integers(0, 50), min_size=bs,
+                          max_size=4 * bs))
+            for _ in range(n_docs)]
+    prompts = []
+    for _ in range(draw(st.integers(1, 6))):
+        doc = draw(st.sampled_from(docs))
+        cut = draw(st.integers(0, len(doc)))
+        tail = draw(st.lists(st.integers(51, 99), min_size=1, max_size=12))
+        prompts.append(np.asarray(doc[:cut] + tail, np.int32))
+    return bs, prompts
+
+
+@given(prompt_sets())
+@settings(max_examples=60, deadline=None)
+def test_radix_insert_invariants(data):
+    bs, prompts = data
+    f = tree_mod.PrefixForest(bs)
+    for rid, p in enumerate(prompts):
+        f.insert_tokens(rid, p)
+    f.validate()
+    # 1. every request's path reconstructs its exact token sequence
+    for rid, p in enumerate(prompts):
+        toks = np.concatenate([n.tokens for n in f.path(rid)
+                               if n.tokens is not None and len(n.tokens)])
+        np.testing.assert_array_equal(toks, p)
+    # 2. sharing is page-aligned: every shared (multi-request) node with a
+    #    parent boundary starts at a multiple of the page size
+    for n in f.real_nodes():
+        if len(n.requests) > 1:
+            assert n.start_pos % bs == 0 or n.parent == tree_mod.ROOT_ID
+    # 3. tree tokens <= total prompt tokens (sharing can only shrink)
+    assert f.total_tokens() <= sum(len(p) for p in prompts)
+    # 4. context length == prompt length
+    for rid, p in enumerate(prompts):
+        assert f.context_len(rid) == len(p)
+
+
+@given(st.integers(1, 8), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_identical_prompts_share_all_pages(n_req, n_pages):
+    bs = 16
+    prompt = np.arange(bs * n_pages, dtype=np.int32)
+    f = tree_mod.PrefixForest(bs)
+    for rid in range(n_req):
+        f.insert_tokens(rid, prompt)
+    f.validate()
+    # shared tokens stored once (+ empty private leaves)
+    assert f.total_tokens() == len(prompt)
+    assert f.total_context() == n_req * len(prompt)
+    if n_req > 1:
+        assert abs(f.mean_sharing_degree() - n_req) < 1e-9
+
+
+def test_append_token_forks_shared_leaf():
+    bs = 4
+    f = tree_mod.PrefixForest(bs)
+    p = np.arange(8, dtype=np.int32)
+    f.insert_tokens(0, p)
+    f.insert_tokens(1, p)          # identical prompt: same leaf
+    f.append_token(0, 100)
+    f.append_token(1, 200)
+    f.validate()
+    assert f.leaf_of[0] != f.leaf_of[1]
+    assert f.context_len(0) == 9 and f.context_len(1) == 9
+    toks0 = np.concatenate([n.tokens for n in f.path(0)
+                            if n.tokens is not None and len(n.tokens)])
+    assert toks0[-1] == 100
+
+
+def test_split_preserves_requests_and_pages():
+    bs = 4
+    f = tree_mod.PrefixForest(bs)
+    f.insert_tokens(0, np.arange(16, dtype=np.int32))
+    # second request shares the first 8 tokens only -> forces a split
+    f.insert_tokens(1, np.concatenate([np.arange(8), 90 + np.arange(4)]
+                                      ).astype(np.int32))
+    f.validate()
+    assert f.context_len(0) == 16
+    assert f.context_len(1) == 12
+    # the shared node has both requests
+    shared = [n for n in f.real_nodes() if len(n.requests) == 2]
+    assert len(shared) == 1 and shared[0].length == 8
+
+
+# --------------------------------------------------------------------- #
+# IO metrics (paper §4.3 complexity claim)
+# --------------------------------------------------------------------- #
+@given(st.integers(2, 32), st.integers(1, 16), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_io_ratio_equals_mean_sharing_degree(b, s_pages, u_pages):
+    bs = 8
+    f = tree_mod.two_level(b, s_pages * bs, u_pages * bs, bs)
+    ratio = f.flash_io_bytes(2, 16) / f.codec_io_bytes(2, 16)
+    assert abs(ratio - f.mean_sharing_degree()) < 1e-9
+    # two-level closed form: (S + B*U)/ (S + U) per request... inverse:
+    s, u = s_pages * bs, u_pages * bs
+    expect = (b * (s + u)) / (s + b * u)
+    assert abs(ratio - expect) < 1e-9
+
+
+def test_synthetic_builders_validate():
+    for f in [tree_mod.two_level(8, 128, 32, 16),
+              tree_mod.full_kary(3, 2, 64, 16),
+              tree_mod.degenerate(4, 32, 16),
+              tree_mod.shared_ratio(8, 1024, 0.9, 16)]:
+        f.validate()
+        assert f.total_tokens() > 0
+
+
+def test_shared_ratio_builder_hits_target():
+    f = tree_mod.shared_ratio(16, 4096, 0.8, 16)
+    s = max(n.length for n in f.real_nodes())
+    total = f.total_tokens()
+    assert abs(s / total - 0.8) < 0.1

@@ -1,0 +1,155 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py).
+
+Pallas kernels run in interpret mode on CPU; shapes sweep GQA group
+structure, page counts, dtypes, masks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model, plan as plan_mod, tree as tree_mod
+from repro.kernels import flash_decode, ops, pac as pac_mod, por, ref
+
+from conftest import dense_from_pool, make_pool
+
+
+# --------------------------------------------------------------------- #
+# PAC oracle self-consistency + the Pallas kernel
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pac_ref_matches_dense_softmax(hq, hkv, dtype):
+    nq, n, d = 3, 37, 16
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (nq, hq, d), dtype)
+    k = jax.random.normal(k2, (n, hkv, d), dtype)
+    v = jax.random.normal(k3, (n, hkv, d), dtype)
+    o, m, l = ref.pac_ref(q, k, v)
+    # dense check per head
+    g = hq // hkv
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    for h in range(hq):
+        kv = h // g
+        s = qf[:, h] @ kf[:, kv].T / np.sqrt(d)
+        expect = jax.nn.softmax(s, -1) @ vf[:, kv]
+        np.testing.assert_allclose(o[:, h], expect,
+                                   rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("hq,hkv,d", [(4, 2, 16), (8, 1, 32), (6, 6, 8)])
+@pytest.mark.parametrize("page", [16, 64])
+def test_pac_kernel_vs_ref(hq, hkv, d, page):
+    """The full PAC pallas kernel over a compiled plan == python oracle."""
+    f = tree_mod.two_level(4, 3 * page, page + 3, block_size=page)
+    cm = cost_model.CostModel(hq, hkv, d, page_size=page)
+    k_pool, v_pool = make_pool(f, hkv, d)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8)
+    q = jax.random.normal(jax.random.PRNGKey(3), (4, hq, d))
+    o_pal = ops.codec_attention(q, k_pool, v_pool, p, impl="pallas")
+    o_ref = ops.codec_attention(q, k_pool, v_pool, p, impl="ref")
+    np.testing.assert_allclose(o_pal, o_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pac_kernel_dtypes(dtype):
+    page, hq, hkv, d = 32, 4, 2, 16
+    f = tree_mod.two_level(3, 2 * page, page, block_size=page)
+    cm = cost_model.CostModel(hq, hkv, d, page_size=page)
+    k_pool, v_pool = make_pool(f, hkv, d, dtype=dtype)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4)
+    q = jax.random.normal(jax.random.PRNGKey(5), (3, hq, d), dtype)
+    o_pal = ops.codec_attention(q, k_pool, v_pool, p, impl="pallas")
+    o_ref = ops.codec_attention(q, k_pool, v_pool, p, impl="ref")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_pac_kernel_sliding_window():
+    page, hq, hkv, d, win = 16, 4, 2, 16, 24
+    f = tree_mod.two_level(3, 4 * page, 2 * page, block_size=page)
+    cm = cost_model.CostModel(hq, hkv, d, page_size=page)
+    k_pool, v_pool = make_pool(f, hkv, d)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4, window=win)
+    q = jax.random.normal(jax.random.PRNGKey(7), (3, hq, d))
+    o_pal = ops.codec_attention(q, k_pool, v_pool, p, impl="pallas",
+                                window=win)
+    o_xla = ops.codec_attention(q, k_pool, v_pool, p, impl="xla",
+                                window=win)
+    # dense windowed oracle
+    kd, vd, lens = dense_from_pool(f, k_pool, v_pool)
+    o_dense = ref.decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                                       jnp.asarray(lens), window=win)
+    np.testing.assert_allclose(o_pal, o_dense, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(o_xla, o_dense, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# POR kernel
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape", [(1, 4, 16), (5, 8, 32)])
+def test_por_kernel_vs_ref(shape):
+    nq, h, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    o1 = jax.random.normal(ks[0], (nq, h, d))
+    o2 = jax.random.normal(ks[1], (nq, h, d))
+    m1 = jax.random.normal(ks[2], (nq, h)) * 3
+    m2 = jax.random.normal(ks[3], (nq, h)) * 3
+    l1 = jnp.abs(jax.random.normal(ks[4], (nq, h))) + 0.1
+    l2 = jnp.abs(jax.random.normal(ks[5], (nq, h))) + 0.1
+    o_r, m_r, l_r = ref.por_ref(o1, m1, l1, o2, m2, l2)
+    o_k, m_k, l_k = por.por(o1, m1, l1, o2, m2, l2, interpret=True)
+    np.testing.assert_allclose(o_k, o_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(m_k, m_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(l_k, l_r, rtol=1e-6, atol=1e-6)
+
+
+def test_por_merges_split_attention():
+    """POR of two KV halves == attention over the concatenation."""
+    nq, h, d, n = 2, 4, 16, 48
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (nq, h, d))
+    k = jax.random.normal(ks[1], (n, h, d))
+    v = jax.random.normal(ks[2], (n, h, d))
+    o_full, m_full, l_full = ref.pac_ref(q, k, v)
+    o1, m1, l1 = ref.pac_ref(q, k[:20], v[:20])
+    o2, m2, l2 = ref.pac_ref(q, k[20:], v[20:])
+    o, m, l = ref.por_ref(o1, m1, l1, o2, m2, l2)
+    np.testing.assert_allclose(o, o_full, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(l * jnp.exp(m),
+                               l_full * jnp.exp(m_full), rtol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# FlashDecoding baseline kernel
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("chunk", [64, 256])
+def test_flash_decode_vs_ref(hq, hkv, chunk):
+    B, d, L = 3, 16, 200
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, hq, d))
+    k = jax.random.normal(ks[1], (B, L, hkv, d))
+    v = jax.random.normal(ks[2], (B, L, hkv, d))
+    lens = jnp.asarray([200, 77, 1])
+    o_fd = flash_decode.flash_decode(q, k, v, lens, chunk=chunk,
+                                     interpret=True)
+    o_ref = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(o_fd, o_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_window():
+    B, hq, hkv, d, L = 2, 4, 2, 16, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, hq, d))
+    k = jax.random.normal(ks[1], (B, L, hkv, d))
+    v = jax.random.normal(ks[2], (B, L, hkv, d))
+    lens = jnp.asarray([128, 90])
+    o_fd = flash_decode.flash_decode(q, k, v, lens, chunk=64, window=32,
+                                     interpret=True)
+    o_ref = ref.decode_attention_ref(q, k, v, lens, window=32)
+    np.testing.assert_allclose(o_fd, o_ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,109 @@
+"""Task division + LPT scheduling properties (paper §5.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel, HardwareSpec
+from repro.core.scheduler import (SubTask, TaskSpec, divide_and_schedule,
+                                  divide_task, lpt, naive_divide)
+
+
+CM = CostModel(8, 2, 64, page_size=64)
+
+
+@st.composite
+def task_sets(draw):
+    t = draw(st.integers(1, 12))
+    return [TaskSpec(i + 1,
+                     draw(st.integers(1, 32)),
+                     draw(st.integers(1, 8192)))
+            for i in range(t)]
+
+
+@given(task_sets(), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_divide_and_schedule_coverage(tasks, lanes):
+    sched = divide_and_schedule(tasks, CM, lanes, page_size=64)
+    # every task's KV range is exactly partitioned by its subtasks
+    by_node = {}
+    for s in sched.subtasks:
+        by_node.setdefault(s.node_id, []).append(s)
+    for t in tasks:
+        subs = sorted(by_node[t.node_id], key=lambda s: (s.q_lo, s.kv_lo))
+        qs = sorted({(s.q_lo, s.q_hi) for s in subs})
+        # q slices tile [0, n_q)
+        assert qs[0][0] == 0 and qs[-1][1] == t.n_q
+        for (a, b), (c, d) in zip(qs, qs[1:]):
+            assert b == c
+        for qlo, qhi in qs:
+            kvs = sorted([(s.kv_lo, s.kv_hi) for s in subs
+                          if (s.q_lo, s.q_hi) == (qlo, qhi)])
+            assert kvs[0][0] == 0 and kvs[-1][1] == t.n
+            for (a, b), (c, d) in zip(kvs, kvs[1:]):
+                assert b == c
+            # page alignment of interior boundaries
+            for lo, hi in kvs:
+                assert lo % 64 == 0
+    # every subtask is assigned exactly one lane
+    assert len(sched.lane_of) == len(sched.subtasks)
+    assert all(0 <= l < lanes for l in sched.lane_of)
+    # makespan equals the max lane cost
+    lane_cost = [0.0] * lanes
+    for i, l in enumerate(sched.lane_of):
+        lane_cost[l] += sched.subtasks[i].cost
+    assert abs(max(lane_cost) - sched.makespan) < 1e-12
+
+
+@given(task_sets(), st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_makespan_beats_or_matches_single_lane(tasks, lanes):
+    multi = divide_and_schedule(tasks, CM, lanes, page_size=64)
+    single = divide_and_schedule(tasks, CM, 1, page_size=64)
+    assert multi.makespan <= single.makespan * 1.001
+
+
+@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=40),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_lpt_guarantee(costs, lanes):
+    """List scheduling: makespan <= avg + max <= 2 x the trivial lower
+    bound (Graham 1966 gives 4/3 vs OPT; vs the bound only 2x holds)."""
+    subs = [SubTask(0, 0, 1, 0, 64, c) for c in costs]
+    lane_of, lane_cost = lpt(subs, lanes)
+    opt_lb = max(max(costs), sum(costs) / lanes)   # trivial lower bound
+    assert max(lane_cost) <= 2 * opt_lb + 1e-9
+
+
+def test_divider_respects_caps():
+    t = TaskSpec(1, 100, 10000)
+    subs = divide_task(t, 3, CM, page_size=64, max_q=32)
+    assert all(s.n_q <= 32 for s in subs)
+    sched = divide_and_schedule([t], CM, 4, 64, max_kv_per_task=2048,
+                                max_q_per_task=32)
+    assert all(s.n <= 2048 for s in sched.subtasks)
+    assert all(s.n_q <= 32 for s in sched.subtasks)
+
+
+def test_skewed_forest_balances_better_than_naive():
+    """Paper Fig. 10: adaptive division beats a fixed division count."""
+    # one huge shared node + many tiny ones (the doc-QA shape)
+    tasks = [TaskSpec(1, 32, 100_000)] + [
+        TaskSpec(i + 2, 1, 64) for i in range(31)]
+    lanes = 8
+    sched = divide_and_schedule(tasks, CM, lanes, page_size=64,
+                                max_kv_per_task=None)
+    naive1 = naive_divide(tasks, 1, CM, page_size=64)
+    _, naive_cost = lpt(naive1, lanes)
+    # adaptive must beat no-division scheduling clearly
+    assert sched.makespan < max(naive_cost) * 0.7
+    # and the imbalance must be small
+    avg = sum(l for l in sched.lane_costs) / lanes
+    assert sched.makespan <= 1.5 * avg
+
+
+def test_cost_lower_bound_holds():
+    tasks = [TaskSpec(1, 4, 4096), TaskSpec(2, 2, 1024)]
+    sched = divide_and_schedule(tasks, CM, 4, 64)
+    total = sum(CM(t.n_q, t.n) for t in tasks)
+    assert sched.makespan >= total / 4 * 0.999  # Eq. 4
