@@ -43,6 +43,53 @@ def paper_cost_model(page_size: int = 64) -> CostModel:
     return CostModel(32, 8, 128, page_size=page_size)
 
 
+def bench_backends(forest: tree_mod.PrefixForest, cm: CostModel,
+                   num_lanes: int = 2, max_q: int = 16,
+                   max_kv: int = 4096, repeats: int = 3,
+                   backends=None) -> Dict[str, Dict]:
+    """Execute every registered attention backend on the forest and
+    report per-call wall time plus max |err| vs the python oracle.
+
+    Interpret-mode Pallas makes absolute numbers meaningless on CPU —
+    use small forests and read this as a numerics/agreement smoke plus
+    a relative plan-overhead probe, not a kernel benchmark.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import registry
+
+    pool_pages = plan_mod.assign_dense_pages(forest)
+    ps = forest.block_size
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    B = len(forest.request_ids)
+    q = jax.random.normal(kq, (B, cm.h_q, cm.d))
+    k_pool = jax.random.normal(kk, (pool_pages, ps, cm.h_kv, cm.d))
+    v_pool = jax.random.normal(kv, (pool_pages, ps, cm.h_kv, cm.d))
+    plans = {
+        "codec": plan_mod.pad_plan(plan_mod.build_plan(
+            forest, cm, num_lanes, max_q, max_kv)),
+        "flash": plan_mod.pad_plan(plan_mod.flash_plan(
+            forest, cm, num_lanes, max_q, max_kv)),
+    }
+    out_ref = registry.get("ref")(q, k_pool, v_pool, plans["codec"])
+    rows: Dict[str, Dict] = {}
+    for name in backends or registry.names():
+        be = registry.get(name)
+        plan = plans.get(be.plan_kind, plans["codec"])
+        prepared = be.prepare(plan)
+
+        def call():
+            return jax.block_until_ready(
+                be(q, k_pool, v_pool, plan, prepared=prepared))
+
+        us = timeit(call, repeats=repeats)
+        err = float(jnp.abs(call() - out_ref).max())
+        rows[name] = dict(us_per_call=us, max_err=err,
+                          tasks=plan.num_tasks)
+    return rows
+
+
 def codec_vs_flash(forest: tree_mod.PrefixForest, cm: CostModel,
                    num_lanes: int = 8, max_q: int = 64,
                    max_kv: int = 8192):

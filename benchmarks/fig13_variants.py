@@ -7,7 +7,7 @@
 
 from __future__ import annotations
 
-from benchmarks.common import codec_vs_flash, emit
+from benchmarks.common import bench_backends, codec_vs_flash, emit
 from repro.configs import ASSIGNED_ARCHS, PAPER_ARCH, get_config
 from repro.core import tree as tree_mod
 from repro.core.cost_model import CostModel
@@ -36,6 +36,13 @@ def main() -> None:
         f = tree_mod.two_level(32, 50_000 // PAGE * PAGE, 1024, PAGE)
         r = codec_vs_flash(f, cm)
         emit("fig13_models", arch, **r)
+
+    # (c) executed backend sweep through the registry (small GQA forest;
+    #     interpret-mode pallas, so wall time is a smoke signal only)
+    cm = CostModel(8, 2, 64, page_size=16)
+    f = tree_mod.two_level(8, 8 * 16, 40, 16)
+    for name, row in bench_backends(f, cm).items():
+        emit("fig13_backends", name, **row)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Quickstart: the CoDec shared-prefix attention op in 60 lines.
 
 Builds a document-QA prefix forest (one shared doc, four questions),
-compiles a decode plan, and runs the attention three ways — the Pallas
-PAC kernel (interpret mode on CPU), the XLA plan implementation, and
-the python oracle — and shows the IO the plan saves vs FlashDecoding.
+compiles a decode plan, runs the attention through EVERY backend in
+the registry (Pallas PAC kernel, XLA plan impl, the Hydragen batched
+decomposition, the FlashDecoding baseline) against the python oracle,
+and shows the IO the plan saves vs FlashDecoding.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import plan as plan_mod, tree as tree_mod
 from repro.core.cost_model import CostModel
-from repro.kernels import ops
+from repro.kernels import registry
 
 PAGE = 64
 N_REQ, DOC_LEN, Q_LEN = 4, 1024, 96
@@ -32,20 +33,27 @@ cm = CostModel(H_Q, H_KV, D, page_size=PAGE)
 plan = plan_mod.build_plan(forest, cm, num_lanes=2, max_q=8)
 print(f"plan: {plan.stats()}")
 
-# 3. run the attention (paged KV pool layout = PagedAttention)
+# 3. run the attention (paged KV pool layout = PagedAttention) through
+#    every registered backend — switching is just a string
 key = jax.random.PRNGKey(0)
 kq, kk, kv = jax.random.split(key, 3)
 q = jax.random.normal(kq, (N_REQ, H_Q, D))              # one query/request
 k_pool = jax.random.normal(kk, (pool_pages, PAGE, H_KV, D))
 v_pool = jax.random.normal(kv, (pool_pages, PAGE, H_KV, D))
 
-out_pallas = ops.codec_attention(q, k_pool, v_pool, plan, impl="pallas")
-out_xla = ops.codec_attention(q, k_pool, v_pool, plan, impl="xla")
-out_ref = ops.codec_attention(q, k_pool, v_pool, plan, impl="ref")
-print("pallas vs ref max |err|:",
-      float(jnp.abs(out_pallas - out_ref).max()))
-print("xla    vs ref max |err|:",
-      float(jnp.abs(out_xla - out_ref).max()))
+flash_plan = plan_mod.flash_plan(forest, cm, num_lanes=2, max_q=8)
+out_ref = registry.get("ref")(q, k_pool, v_pool, plan)
+for name in registry.names():
+    if name == "ref":
+        continue
+    backend = registry.get(name)
+    # a backend declares which planner it wants (flash = per-request)
+    p = flash_plan if backend.plan_kind == "flash" else plan
+    out = backend(q, k_pool, v_pool, p)
+    err = float(jnp.abs(out - out_ref).max())
+    print(f"{name:13s} vs ref max |err|: {err:.2e}   "
+          f"(plan_kind={backend.plan_kind}, tasks={p.num_tasks}, "
+          f"window={backend.supports_window}, gqa={backend.supports_gqa})")
 
 # 4. what did prefix sharing buy? (paper Fig. 6 metric)
 io_codec = forest.codec_io_bytes(H_KV, D)

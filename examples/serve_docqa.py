@@ -70,6 +70,8 @@ def run(backend: str):
 
 
 out_codec = run("codec-pallas")
+out_hydra = run("hydragen")
 out_flash = run("flash")
-assert out_codec == out_flash, "backends must produce identical tokens"
-print("codec outputs == flash outputs: OK")
+assert out_codec == out_flash == out_hydra, \
+    "backends must produce identical tokens"
+print("codec == hydragen == flash outputs: OK")

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Decode-attention kernels + the pluggable backend registry.
+#
+# ``registry`` is the public resolution point: string name -> backend
+# (codec-pallas / codec-xla / flash / hydragen / ref).  ``pac``/``por``
+# are the Pallas TPU kernels, ``ops`` the jit'd wrappers + XLA fallback,
+# ``hydragen`` the batched shared-prefix backend, ``ref`` the oracles.

@@ -1,0 +1,14 @@
+"""Version shims for jax API renames used by the Pallas kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this install provides.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:   # pragma: no cover - depends on jax build
+    raise ImportError(
+        "unsupported jax version: pallas tpu exposes neither "
+        "CompilerParams nor TPUCompilerParams")

@@ -24,6 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import _CompilerParams
+
 MASK_VALUE = -1e30
 
 
@@ -119,7 +121,7 @@ def flash_decode(q: jnp.ndarray,        # (B, h_q, d)
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, h_q, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(kv_lens.astype(jnp.int32), q, k, v)

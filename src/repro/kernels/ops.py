@@ -170,11 +170,12 @@ def pac_xla(q_tasks: jnp.ndarray,     # (T+1, max_q, h_q, d)
 @functools.partial(
     jax.jit,
     static_argnames=("num_queries", "window", "impl", "interpret"))
-def codec_attention_arrays(q: jnp.ndarray, k_pool: jnp.ndarray,
-                           v_pool: jnp.ndarray, pa: PlanArrays,
-                           num_queries: int, *, window: int = 0,
-                           impl: str = "pallas",
-                           interpret: bool = True) -> jnp.ndarray:
+def codec_partials_arrays(q: jnp.ndarray, k_pool: jnp.ndarray,
+                          v_pool: jnp.ndarray, pa: PlanArrays,
+                          num_queries: int, *, window: int = 0,
+                          impl: str = "pallas",
+                          interpret: bool = True):
+    """Plan-covered attention -> per-query mergeable (o, m, l) stats."""
     q_tasks = gather_queries(q, pa.q_gather)
     if impl == "pallas":
         o, m, l = pac_mod.pac(
@@ -196,7 +197,17 @@ def codec_attention_arrays(q: jnp.ndarray, k_pool: jnp.ndarray,
     m = jnp.where(live[..., None], m, MASK_VALUE)
     l = jnp.where(live[..., None], l, 0.0)
     o = jnp.where(live[..., None, None], o, 0.0)  # trash may hold NaNs
-    out = combine_partials(o, m, l, pa.seg_ids, num_queries)
+    return combine_partials_stats(o, m, l, pa.seg_ids, num_queries)
+
+
+def codec_attention_arrays(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, pa: PlanArrays,
+                           num_queries: int, *, window: int = 0,
+                           impl: str = "pallas",
+                           interpret: bool = True) -> jnp.ndarray:
+    out, _, _ = codec_partials_arrays(q, k_pool, v_pool, pa, num_queries,
+                                      window=window, impl=impl,
+                                      interpret=interpret)
     return out.astype(q.dtype)
 
 

@@ -35,6 +35,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import _CompilerParams
+
 MASK_VALUE = -1e30
 
 
@@ -211,7 +213,7 @@ def pac(q_tasks: jnp.ndarray,       # (T+1, max_q, h_q, d)
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(step_task, step_page, step_valid, step_first, step_last,

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import _CompilerParams
+
 
 def _por_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
                 o_ref, m_ref, l_ref):
@@ -60,7 +62,7 @@ def por(o1: jnp.ndarray, m1: jnp.ndarray, l1: jnp.ndarray,
             jax.ShapeDtypeStruct((n, h), jnp.float32),
             jax.ShapeDtypeStruct((n, h), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(o1, m1, l1, o2, m2, l2)

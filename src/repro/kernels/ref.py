@@ -136,11 +136,11 @@ def decode_attention_ref(q, k, v, kv_lens, window: int = 0):
         q, k, v, kv_lens.astype(jnp.int32))
 
 
-def codec_ref(q, k_pool, v_pool, plan) -> jnp.ndarray:
-    """Full shared-prefix decode attention oracle driven by a DecodePlan.
+def codec_ref_stats(q, k_pool, v_pool, plan, window: int = 0):
+    """Shared-prefix decode attention oracle driven by a DecodePlan.
 
     q: (B, h_q, d); pools: (P, page, n_kv, d).  Loops tasks in Python —
-    slow, exact.
+    slow, exact.  Returns per-query mergeable (o, m, l).
     """
     ps = plan.page_size
     parts_o, parts_m, parts_l, segs = [], [], [], []
@@ -158,12 +158,18 @@ def codec_ref(q, k_pool, v_pool, plan) -> jnp.ndarray:
         qp = jnp.asarray(plan.q_pos[t, :nq])
         o, m, l = pac_ref(qt, k, v, kv_len=kvlen,
                           pos_base=int(plan.task_pos[t]), q_pos=qp,
-                          window=getattr(plan, "window", 0))
+                          window=window)
         parts_o.append(o); parts_m.append(m); parts_l.append(l)
         segs.append(rows)
     o_parts = jnp.concatenate(parts_o, 0)
     m_parts = jnp.concatenate(parts_m, 0)
     l_parts = jnp.concatenate(parts_l, 0)
     seg_ids = jnp.concatenate([jnp.asarray(s) for s in segs], 0)
-    return combine_partials_ref(o_parts, m_parts, l_parts, seg_ids,
-                                plan.num_queries)
+    return combine_partials_stats_ref(o_parts, m_parts, l_parts, seg_ids,
+                                      plan.num_queries)
+
+
+def codec_ref(q, k_pool, v_pool, plan) -> jnp.ndarray:
+    """Full-output convenience wrapper around ``codec_ref_stats``."""
+    o, _, _ = codec_ref_stats(q, k_pool, v_pool, plan)
+    return o

@@ -1,0 +1,158 @@
+"""Pluggable decode-attention backend registry.
+
+Every decode-attention implementation is registered here behind one
+uniform interface so the engine, benchmarks, and tests resolve backends
+by *name* instead of hard-coded ``if/elif`` chains:
+
+    backend = registry.get("hydragen")
+    out = backend(q, k_pool, v_pool, plan, window=0)        # (B, h_q, d)
+
+Backends additionally expose ``partials`` — per-query mergeable flash
+statistics ``(o, m, l)`` — so the serving engine can POR-merge a
+backend's frozen-plan output with its per-step tail-page attention
+(see DESIGN.md §3).  ``prepare(plan)`` converts the host ``DecodePlan``
+into whatever device arrays the backend consumes; the engine caches the
+result across decode steps and only re-runs it on plan rebuilds.
+
+Capability flags let callers pick viable backends per scenario:
+
+* ``needs_plan``       — consumes a compiled ``DecodePlan``;
+* ``supports_window``  — honours sliding-window masks (``window > 0``);
+* ``supports_gqa``     — handles h_q > n_kv head layouts;
+* ``plan_kind``        — which planner the engine must run for it:
+  ``"codec"`` (shared-prefix plan) or ``"flash"`` (per-request plan).
+
+Registered backends: ``codec-pallas``, ``codec-xla``, ``flash``,
+``hydragen``, and the python oracle ``ref``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import hydragen as hydragen_mod
+from . import ops
+from . import ref as ref_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One decode-attention implementation.
+
+    ``partials_fn(q, k_pool, v_pool, plan, prepared, window)`` returns
+    per-query flash statistics ``(o, m, l)`` — ``o`` normalised within
+    the plan-covered KV — a valid partial for further POR merges.
+    """
+
+    name: str
+    partials_fn: Callable[..., Tuple]
+    prepare: Callable[[Any], Any] = ops.plan_arrays
+    plan_kind: str = "codec"
+    needs_plan: bool = True
+    supports_window: bool = True
+    supports_gqa: bool = True
+    description: str = ""
+
+    def partials(self, q, k_pool, v_pool, plan, prepared=None, *,
+                 window: int = 0):
+        """Per-query mergeable (o, m, l) over the plan-covered KV."""
+        if window and not self.supports_window:
+            raise ValueError(
+                f"backend {self.name!r} does not support sliding windows")
+        if self.needs_plan and plan is None:
+            raise ValueError(
+                f"backend {self.name!r} requires a compiled DecodePlan")
+        if prepared is None:
+            prepared = self.prepare(plan)
+        return self.partials_fn(q, k_pool, v_pool, plan, prepared, window)
+
+    def __call__(self, q, k_pool, v_pool, plan, *, window: int = 0,
+                 prepared=None) -> jnp.ndarray:
+        """Full decode attention: (B, h_q, d) -> (B, h_q, d)."""
+        o, _, _ = self.partials(q, k_pool, v_pool, plan, prepared,
+                                window=window)
+        return o.astype(q.dtype)
+
+
+_REGISTRY: Dict[str, AttentionBackend] = {}
+
+
+def register(backend: AttentionBackend) -> AttentionBackend:
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown attention backend {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def names(*, window: Optional[bool] = None,
+          gqa: Optional[bool] = None) -> List[str]:
+    """Registered backend names, optionally filtered by capability."""
+    out = []
+    for n, b in sorted(_REGISTRY.items()):
+        if window is not None and b.supports_window != window:
+            continue
+        if gqa is not None and b.supports_gqa != gqa:
+            continue
+        out.append(n)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# built-in backends
+# --------------------------------------------------------------------- #
+def _codec_partials(impl: str):
+    def fn(q, k_pool, v_pool, plan, pa, window):
+        return ops.codec_partials_arrays(q, k_pool, v_pool, pa,
+                                         plan.num_queries, window=window,
+                                         impl=impl)
+    return fn
+
+
+def _ref_partials(q, k_pool, v_pool, plan, prepared, window):
+    return ref_mod.codec_ref_stats(q, k_pool, v_pool, plan, window=window)
+
+
+register(AttentionBackend(
+    name="codec-pallas",
+    partials_fn=_codec_partials("pallas"),
+    description="CoDec PAC Pallas kernel over the lane-scheduled plan "
+                "(interpret mode on CPU, compiled on TPU)"))
+
+register(AttentionBackend(
+    name="codec-xla",
+    partials_fn=_codec_partials("xla"),
+    description="CoDec plan semantics as dense vectorised XLA ops "
+                "(what the distributed serve_step lowers)"))
+
+register(AttentionBackend(
+    name="flash",
+    partials_fn=_codec_partials("xla"),
+    plan_kind="flash",
+    description="FlashDecoding baseline: per-request plan, shared "
+                "prefix KV re-read once per request"))
+
+register(AttentionBackend(
+    name="hydragen",
+    partials_fn=hydragen_mod.hydragen_partials,
+    prepare=hydragen_mod.prepare,
+    description="Hydragen-style batched shared-prefix decomposition: "
+                "one dense matmul per shared node for all sharing "
+                "queries, per-request suffix attention, LSE merge"))
+
+register(AttentionBackend(
+    name="ref",
+    partials_fn=_ref_partials,
+    prepare=lambda plan: None,
+    description="python-loop oracle (slow, exact)"))

@@ -22,8 +22,9 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--smoke", action="store_true")
+    from ..kernels import registry
     ap.add_argument("--backend", default="codec-pallas",
-                    choices=["codec-pallas", "codec-xla", "flash"])
+                    choices=registry.names())
     ap.add_argument("--compare", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--doc-len", type=int, default=256)

@@ -14,9 +14,12 @@ Continuous-batching decode loop with CoDec as the attention backend:
 * Mamba layers (hybrid archs) keep per-request recurrent state, with
   end-of-node state caching so shared prefixes are also not recomputed
   for SSM mixers (the SSM analogue of prefix caching — see DESIGN.md §5);
-* backends: ``codec-pallas`` / ``codec-xla`` (prefix-shared) and
-  ``flash`` (per-request dense plan — the FlashDecoding baseline, used by
-  the paper's end-to-end comparison).
+* decode attention backends are resolved by NAME through
+  ``kernels.registry`` (``codec-pallas`` / ``codec-xla`` / ``hydragen``
+  prefix-shared, ``flash`` per-request baseline, ``ref`` oracle); the
+  backend's ``prepare(plan)`` output is cached across steps and its
+  ``partials`` are POR-merged with the tail-page attention — see
+  DESIGN.md §2–§3 for the contract.
 """
 
 from __future__ import annotations
@@ -33,7 +36,7 @@ from ..configs.base import LayerKind, ModelConfig
 from ..core import plan as plan_mod
 from ..core import tree as tree_mod
 from ..core.cost_model import CostModel
-from ..kernels import ops, pac as pac_mod, ref as ref_mod
+from ..kernels import ops, ref as ref_mod, registry as registry_mod
 from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
@@ -75,6 +78,12 @@ class DecodeEngine:
         self.cfg = cfg
         self.params = params
         self.backend = backend
+        self._backend = registry_mod.get(backend)
+        if (cfg.sliding_window and not self._backend.supports_window
+                and any(k.mixer == "attn_local"
+                        for k in cfg.layer_pattern)):
+            raise ValueError(f"backend {backend!r} cannot serve "
+                             f"sliding-window layers")
         self.page_size = page_size
         self.num_lanes = num_lanes
         self.max_q = max_q
@@ -314,20 +323,20 @@ class DecodeEngine:
         req_rows = {r: i for i, r in enumerate(rows)}
         ps = self.page_size
         truncate = {}
-        self._tail_info = []   # per row: (node, tail_start_local)
         for r in rows:
             leaf = self.forest.nodes[self.forest.leaf_of[r]]
             tail_start = max(0, ((leaf.length - 1) // ps) * ps)
             truncate[leaf.id] = tail_start
-            self._tail_info.append((leaf, tail_start))
+        build = (plan_mod.flash_plan if self._backend.plan_kind == "flash"
+                 else plan_mod.build_plan)
         self._plans = {}
         for w in self._windows():
-            p = plan_mod.build_plan(
+            p = build(
                 self.forest, self.cost_model, self.num_lanes, self.max_q,
                 self.max_kv_per_task, req_rows=req_rows, window=w,
                 truncate=truncate)
             p = plan_mod.pad_plan(p)
-            self._plans[w] = (p, ops.plan_arrays(p))
+            self._plans[w] = (p, self._backend.prepare(p))
         self._rows = rows
         self._plan_dirty = False
         self._steps_since_plan = 0
@@ -340,7 +349,7 @@ class DecodeEngine:
             slot = np.arange(p.max_q)[None, :]
             live = slot < p.task_qnum[:, None]
             p.q_pos = p.q_pos + live.astype(np.int32)
-            self._plans[w] = (p, ops.plan_arrays(p))
+            self._plans[w] = (p, self._backend.prepare(p))
 
     # ------------------------------------------------------------------ #
     # decode step
@@ -442,56 +451,17 @@ class DecodeEngine:
 
     def _attend(self, qb, k_pool, v_pool, window, B,
                 tail_pages, tail_base, q_pos):
-        cfg = self.cfg
-        if self.backend == "flash":
-            plan, pa = self._flash_plan(window)
-        else:
-            plan, pa = self._plans[window]
-        impl = "xla" if self.backend.endswith("xla") else "pallas"
-        # frozen part
-        q_tasks = ops.gather_queries(qb, pa.q_gather)
-        if impl == "pallas":
-            o_p, m_p, l_p = pac_mod.pac(
-                q_tasks, pa.q_pos, k_pool, v_pool,
-                pa.step_task, pa.step_page, pa.step_valid, pa.step_first,
-                pa.step_last, pa.step_pos, pa.step_kvlen,
-                window=window, interpret=True,
-                num_lanes=pa.step_task.shape[0],
-                max_steps=pa.step_task.shape[1])
-        else:
-            o_p, m_p, l_p = ops.pac_xla(q_tasks, pa.q_pos, k_pool, v_pool,
-                                        pa.task_pages, pa.task_kvlen,
-                                        pa.task_pos, window=window)
-        slot = jnp.arange(pa.q_gather.shape[1])[None, :]
-        live = slot < pa.task_qnum[:, None]
-        m_p = jnp.where(live[..., None], m_p, -1e30)
-        l_p = jnp.where(live[..., None], l_p, 0.0)
-        o_p = jnp.where(live[..., None, None], o_p, 0.0)
-        o_f, m_f, l_f = ops.combine_partials_stats(
-            o_p, m_p, l_p, pa.seg_ids, plan.num_queries)
-        # tail part
+        plan, prepared = self._plans[window]
+        # frozen part: backend partials over all full pages
+        o_f, m_f, l_f = self._backend.partials(
+            qb, k_pool, v_pool, plan, prepared, window=window)
+        # tail part: each request's growing last page
         kt = k_pool[jnp.asarray(tail_pages)]
         vt = v_pool[jnp.asarray(tail_pages)]
         o_t, m_t, l_t = ops.single_page_attention(
             qb, kt, vt, tail_base, q_pos, window=window)
         o, _, _ = ref_mod.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
         return o.astype(qb.dtype)
-
-    def _flash_plan(self, window):
-        """Per-request (non-shared) baseline plan, rebuilt with the same
-        cadence as the codec plans."""
-        key = ("flash", window)
-        if key not in self._plans:
-            rows = self._rows
-            req_rows = {r: i for i, r in enumerate(rows)}
-            truncate = {leaf.id: ts for leaf, ts in self._tail_info}
-            p = plan_mod.flash_plan(
-                self.forest, self.cost_model, self.num_lanes, self.max_q,
-                self.max_kv_per_task, req_rows=req_rows, window=window,
-                truncate=truncate)
-            p = plan_mod.pad_plan(p)
-            self._plans[key] = (p, ops.plan_arrays(p))
-        return self._plans[key]
 
     # ------------------------------------------------------------------ #
     def run(self, max_steps: int = 64) -> Dict[int, List[int]]:

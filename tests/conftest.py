@@ -13,6 +13,23 @@ import pytest
 
 jax.config.update("jax_enable_x64", False)
 
+# Shared hypothesis budget: tier-1 must finish on CPU in minutes, so every
+# property test runs few, deterministic examples (override with
+# HYPOTHESIS_PROFILE=thorough for a deeper local sweep).  Modules guard the
+# import and provide hand-picked fallback cases, so the suite collects and
+# the oracle properties still run when hypothesis is not installed.
+try:
+    from hypothesis import HealthCheck, settings
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile(
+        "tier1", max_examples=10, deadline=None, derandomize=True,
+        suppress_health_check=list(HealthCheck))
+    settings.register_profile("thorough", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "tier1"))
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
 
 @pytest.fixture(scope="session")
 def rng():

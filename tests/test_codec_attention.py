@@ -1,47 +1,24 @@
 """End-to-end shared-prefix attention: every impl vs the dense oracle,
-over randomly generated forests (the system-level property test)."""
+over deterministic hand-picked forests plus (when hypothesis is
+installed) randomly generated ones — the system-level property test."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from conftest import HAVE_HYPOTHESIS, dense_from_pool, make_pool
 from repro.core import cost_model, plan as plan_mod, tree as tree_mod
 from repro.kernels import ops, ref
-
-from conftest import dense_from_pool, make_pool
 
 PAGE = 16
 CM = cost_model.CostModel(4, 2, 16, page_size=PAGE)
 
 
-@st.composite
-def forests(draw):
-    """Random forest: a few roots, random chains, random sharing."""
-    f = tree_mod.PrefixForest(PAGE)
-    n_roots = draw(st.integers(1, 3))
-    rid = 0
-    for _ in range(n_roots):
-        root_len = draw(st.integers(1, 4)) * PAGE
-        root = f._new_node(tree_mod.ROOT_ID, root_len, 0)
-        n_children = draw(st.integers(1, 3))
-        for _ in range(n_children):
-            depth = draw(st.integers(0, 2))
-            cur = root
-            for _ in range(depth):
-                cur = f._new_node(cur.id, draw(st.integers(1, 2)) * PAGE,
-                                  cur.end_pos)
-            leaf = f._new_node(cur.id, draw(st.integers(1, 2 * PAGE)),
-                               cur.end_pos)
-            f.attach_request(rid, leaf.id)
-            rid += 1
-    return f
-
-
-@given(forests(), st.sampled_from(["xla", "ref"]))
-@settings(max_examples=25, deadline=None)
-def test_codec_matches_dense_oracle(f, impl):
+# --------------------------------------------------------------------- #
+# oracle checks (shared by the deterministic and property-based tests)
+# --------------------------------------------------------------------- #
+def _check_matches_dense_oracle(f, impl):
     f.validate()
     B = len(f.request_ids)
     k_pool, v_pool = make_pool(f, 2, 16)
@@ -55,9 +32,7 @@ def test_codec_matches_dense_oracle(f, impl):
     np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
 
 
-@given(forests())
-@settings(max_examples=8, deadline=None)
-def test_pallas_impl_matches_xla(f):
+def _check_pallas_matches_xla(f):
     B = len(f.request_ids)
     k_pool, v_pool = make_pool(f, 2, 16)
     p = plan_mod.build_plan(f, CM, num_lanes=2, max_q=8)
@@ -67,6 +42,124 @@ def test_pallas_impl_matches_xla(f):
     np.testing.assert_allclose(o_p, o_x, rtol=1e-5, atol=1e-5)
 
 
+def _check_segment_reduction_equals_pairwise_por(n_parts, seed):
+    """The flattened segment LSE == any order of pairwise POR merges
+    (associativity/commutativity, paper §4.3)."""
+    h, d, nq = 2, 8, 3
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3 * n_parts)
+    parts = []
+    for i in range(n_parts):
+        o = jax.random.normal(ks[3 * i], (nq, h, d))
+        m = jax.random.normal(ks[3 * i + 1], (nq, h)) * 2
+        l = jnp.abs(jax.random.normal(ks[3 * i + 2], (nq, h))) + 0.1
+        parts.append((o, m, l))
+    # pairwise left fold
+    o, m, l = parts[0]
+    for o2, m2, l2 in parts[1:]:
+        o, m, l = ref.por_ref(o, m, l, o2, m2, l2)
+    # pairwise reversed fold
+    o_r, m_r, l_r = parts[-1]
+    for o2, m2, l2 in reversed(parts[:-1]):
+        o_r, m_r, l_r = ref.por_ref(o_r, m_r, l_r, o2, m2, l2)
+    np.testing.assert_allclose(o, o_r, rtol=1e-5, atol=1e-5)
+    # segment reduction over all parts at once
+    o_parts = jnp.concatenate([p[0] for p in parts], 0)
+    m_parts = jnp.concatenate([p[1] for p in parts], 0)
+    l_parts = jnp.concatenate([p[2] for p in parts], 0)
+    segs = jnp.tile(jnp.arange(nq), n_parts)
+    o_seg = ref.combine_partials_ref(o_parts, m_parts, l_parts, segs, nq)
+    np.testing.assert_allclose(o_seg, o, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# deterministic hand-picked forests (run with or without hypothesis)
+# --------------------------------------------------------------------- #
+def _mixed_forest():
+    """Two unrelated roots, uneven depths, a partial tail page."""
+    f = tree_mod.PrefixForest(PAGE)
+    r1 = f._new_node(tree_mod.ROOT_ID, 2 * PAGE, 0)
+    mid = f._new_node(r1.id, PAGE, r1.end_pos)
+    f.attach_request(0, f._new_node(mid.id, PAGE + 5, mid.end_pos).id)
+    f.attach_request(1, f._new_node(mid.id, 3, mid.end_pos).id)
+    f.attach_request(2, f._new_node(r1.id, 2 * PAGE, r1.end_pos).id)
+    r2 = f._new_node(tree_mod.ROOT_ID, PAGE, 0)
+    f.attach_request(3, f._new_node(r2.id, 2 * PAGE - 1, r2.end_pos).id)
+    return f
+
+
+def _named_forests():
+    return {
+        "two_level": tree_mod.two_level(4, 3 * PAGE, PAGE + 3, PAGE),
+        "kary": tree_mod.full_kary(3, 2, 2 * PAGE, PAGE),
+        "degenerate": tree_mod.degenerate(4, 2 * PAGE, PAGE),
+        "single_request": tree_mod.two_level(1, 2 * PAGE, 5, PAGE),
+        "mixed": _mixed_forest(),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_named_forests()))
+@pytest.mark.parametrize("impl", ["xla", "ref"])
+def test_codec_matches_dense_oracle_fixed(name, impl):
+    _check_matches_dense_oracle(_named_forests()[name], impl)
+
+
+@pytest.mark.parametrize("name", ["two_level", "mixed"])
+def test_pallas_impl_matches_xla_fixed(name):
+    _check_pallas_matches_xla(_named_forests()[name])
+
+
+@pytest.mark.parametrize("n_parts,seed", [(1, 0), (2, 1), (5, 2)])
+def test_segment_reduction_equals_pairwise_por_fixed(n_parts, seed):
+    _check_segment_reduction_equals_pairwise_por(n_parts, seed)
+
+
+# --------------------------------------------------------------------- #
+# property-based sweeps (hypothesis only; budget set in conftest)
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def forests(draw):
+        """Random forest: a few roots, random chains, random sharing."""
+        f = tree_mod.PrefixForest(PAGE)
+        n_roots = draw(st.integers(1, 3))
+        rid = 0
+        for _ in range(n_roots):
+            root_len = draw(st.integers(1, 4)) * PAGE
+            root = f._new_node(tree_mod.ROOT_ID, root_len, 0)
+            n_children = draw(st.integers(1, 3))
+            for _ in range(n_children):
+                depth = draw(st.integers(0, 2))
+                cur = root
+                for _ in range(depth):
+                    cur = f._new_node(cur.id,
+                                      draw(st.integers(1, 2)) * PAGE,
+                                      cur.end_pos)
+                leaf = f._new_node(cur.id, draw(st.integers(1, 2 * PAGE)),
+                                   cur.end_pos)
+                f.attach_request(rid, leaf.id)
+                rid += 1
+        return f
+
+    @given(forests(), st.sampled_from(["xla", "ref"]))
+    def test_codec_matches_dense_oracle(f, impl):
+        _check_matches_dense_oracle(f, impl)
+
+    @given(forests())
+    @settings(max_examples=4)
+    def test_pallas_impl_matches_xla(f):
+        _check_pallas_matches_xla(f)
+
+    @given(st.integers(1, 6), st.integers(0, 3))
+    def test_segment_reduction_equals_pairwise_por(n_parts, seed):
+        _check_segment_reduction_equals_pairwise_por(n_parts, seed)
+
+
+# --------------------------------------------------------------------- #
+# plan-structure regressions (hypothesis-free)
+# --------------------------------------------------------------------- #
 def test_flash_plan_is_prefix_blind_but_correct():
     """The FlashDecoding-style plan reads shared KV once per request —
     more IO, identical numerics."""
@@ -96,35 +189,3 @@ def test_pad_plan_is_numerically_invisible():
     o3 = ops.codec_attention(q, k_pool, v_pool, pp, impl="pallas")
     np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(o1, o3, rtol=1e-5, atol=1e-5)
-
-
-@given(st.integers(1, 6), st.integers(0, 3))
-@settings(max_examples=10, deadline=None)
-def test_segment_reduction_equals_pairwise_por(n_parts, seed):
-    """The flattened segment LSE == any order of pairwise POR merges
-    (associativity/commutativity, paper §4.3)."""
-    h, d, nq = 2, 8, 3
-    key = jax.random.PRNGKey(seed)
-    ks = jax.random.split(key, 3 * n_parts)
-    parts = []
-    for i in range(n_parts):
-        o = jax.random.normal(ks[3 * i], (nq, h, d))
-        m = jax.random.normal(ks[3 * i + 1], (nq, h)) * 2
-        l = jnp.abs(jax.random.normal(ks[3 * i + 2], (nq, h))) + 0.1
-        parts.append((o, m, l))
-    # pairwise left fold
-    o, m, l = parts[0]
-    for o2, m2, l2 in parts[1:]:
-        o, m, l = ref.por_ref(o, m, l, o2, m2, l2)
-    # pairwise reversed fold
-    o_r, m_r, l_r = parts[-1]
-    for o2, m2, l2 in reversed(parts[:-1]):
-        o_r, m_r, l_r = ref.por_ref(o_r, m_r, l_r, o2, m2, l2)
-    np.testing.assert_allclose(o, o_r, rtol=1e-5, atol=1e-5)
-    # segment reduction over all parts at once
-    o_parts = jnp.concatenate([p[0] for p in parts], 0)
-    m_parts = jnp.concatenate([p[1] for p in parts], 0)
-    l_parts = jnp.concatenate([p[2] for p in parts], 0)
-    segs = jnp.tile(jnp.arange(nq), n_parts)
-    o_seg = ref.combine_partials_ref(o_parts, m_parts, l_parts, segs, nq)
-    np.testing.assert_allclose(o_seg, o, rtol=1e-5, atol=1e-5)

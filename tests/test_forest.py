@@ -3,36 +3,14 @@
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
+from conftest import HAVE_HYPOTHESIS
 from repro.core import tree as tree_mod
 
 
 # --------------------------------------------------------------------- #
 # radix insertion
 # --------------------------------------------------------------------- #
-@st.composite
-def prompt_sets(draw):
-    """Prompts with controlled shared structure."""
-    bs = draw(st.integers(4, 64))
-    n_docs = draw(st.integers(1, 3))
-    docs = [draw(st.lists(st.integers(0, 50), min_size=bs,
-                          max_size=4 * bs))
-            for _ in range(n_docs)]
-    prompts = []
-    for _ in range(draw(st.integers(1, 6))):
-        doc = draw(st.sampled_from(docs))
-        cut = draw(st.integers(0, len(doc)))
-        tail = draw(st.lists(st.integers(51, 99), min_size=1, max_size=12))
-        prompts.append(np.asarray(doc[:cut] + tail, np.int32))
-    return bs, prompts
-
-
-@given(prompt_sets())
-@settings(max_examples=60, deadline=None)
-def test_radix_insert_invariants(data):
-    bs, prompts = data
+def _check_radix_insert_invariants(bs, prompts):
     f = tree_mod.PrefixForest(bs)
     for rid, p in enumerate(prompts):
         f.insert_tokens(rid, p)
@@ -54,9 +32,7 @@ def test_radix_insert_invariants(data):
         assert f.context_len(rid) == len(p)
 
 
-@given(st.integers(1, 8), st.integers(1, 5))
-@settings(max_examples=20, deadline=None)
-def test_identical_prompts_share_all_pages(n_req, n_pages):
+def _check_identical_prompts_share_all_pages(n_req, n_pages):
     bs = 16
     prompt = np.arange(bs * n_pages, dtype=np.int32)
     f = tree_mod.PrefixForest(bs)
@@ -68,6 +44,57 @@ def test_identical_prompts_share_all_pages(n_req, n_pages):
     assert f.total_context() == n_req * len(prompt)
     if n_req > 1:
         assert abs(f.mean_sharing_degree() - n_req) < 1e-9
+
+
+_DOC = list(range(0, 40))
+
+
+@pytest.mark.parametrize("bs,prompts", [
+    (4, [np.asarray(_DOC[:16] + [60, 61], np.int32),
+         np.asarray(_DOC[:16] + [70, 71, 72], np.int32),
+         np.asarray(_DOC[:8] + [80], np.int32)]),
+    (8, [np.asarray(_DOC + [90], np.int32),
+         np.asarray(_DOC[:24] + [91, 92], np.int32)]),
+    (16, [np.asarray([51, 52, 53], np.int32)]),    # shorter than a page
+    (5, [np.asarray(_DOC[:10] + [60], np.int32),
+         np.asarray(_DOC[:10] + [60], np.int32)]),  # identical prompts
+])
+def test_radix_insert_invariants_fixed(bs, prompts):
+    _check_radix_insert_invariants(bs, prompts)
+
+
+@pytest.mark.parametrize("n_req,n_pages", [(1, 1), (2, 3), (8, 5)])
+def test_identical_prompts_share_all_pages_fixed(n_req, n_pages):
+    _check_identical_prompts_share_all_pages(n_req, n_pages)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, strategies as st
+
+    @st.composite
+    def prompt_sets(draw):
+        """Prompts with controlled shared structure."""
+        bs = draw(st.integers(4, 64))
+        n_docs = draw(st.integers(1, 3))
+        docs = [draw(st.lists(st.integers(0, 50), min_size=bs,
+                              max_size=4 * bs))
+                for _ in range(n_docs)]
+        prompts = []
+        for _ in range(draw(st.integers(1, 6))):
+            doc = draw(st.sampled_from(docs))
+            cut = draw(st.integers(0, len(doc)))
+            tail = draw(st.lists(st.integers(51, 99), min_size=1,
+                                 max_size=12))
+            prompts.append(np.asarray(doc[:cut] + tail, np.int32))
+        return bs, prompts
+
+    @given(prompt_sets())
+    def test_radix_insert_invariants(data):
+        _check_radix_insert_invariants(*data)
+
+    @given(st.integers(1, 8), st.integers(1, 5))
+    def test_identical_prompts_share_all_pages(n_req, n_pages):
+        _check_identical_prompts_share_all_pages(n_req, n_pages)
 
 
 def test_append_token_forks_shared_leaf():
@@ -104,8 +131,8 @@ def test_split_preserves_requests_and_pages():
 # --------------------------------------------------------------------- #
 # IO metrics (paper §4.3 complexity claim)
 # --------------------------------------------------------------------- #
-@given(st.integers(2, 32), st.integers(1, 16), st.integers(1, 8))
-@settings(max_examples=30, deadline=None)
+@pytest.mark.parametrize("b,s_pages,u_pages", [
+    (2, 1, 1), (8, 4, 2), (32, 16, 8), (5, 16, 1), (17, 1, 8)])
 def test_io_ratio_equals_mean_sharing_degree(b, s_pages, u_pages):
     bs = 8
     f = tree_mod.two_level(b, s_pages * bs, u_pages * bs, bs)

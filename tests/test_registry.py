@@ -1,0 +1,245 @@
+"""Backend registry contract + every registered backend vs the oracle.
+
+The shared fixture is a doc-QA style forest; each registered backend
+must match the dense decode-attention oracle within fp32 tolerance on
+it, including GQA and sliding-window configs and a degenerate
+single-request forest.  Plan edge cases (pad_plan bucketing,
+window-pruning relane, trash-row flush) are covered at the bottom."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import dense_from_pool, make_pool
+from repro.core import cost_model, plan as plan_mod, tree as tree_mod
+from repro.kernels import hydragen, ops, ref, registry
+
+PAGE = 16
+BACKENDS = registry.names()
+
+
+def _fixture(forest, hq=4, hkv=2, d=16, key=0):
+    cm = cost_model.CostModel(hq, hkv, d, page_size=PAGE)
+    k_pool, v_pool = make_pool(forest, hkv, d, key=key)
+    B = len(forest.request_ids)
+    q = jax.random.normal(jax.random.PRNGKey(key + 1), (B, hq, d))
+    return cm, k_pool, v_pool, q
+
+
+def _dense_expect(forest, q, k_pool, v_pool, window=0):
+    kd, vd, lens = dense_from_pool(forest, k_pool, v_pool)
+    return ref.decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                                    jnp.asarray(lens), window=window)
+
+
+# --------------------------------------------------------------------- #
+# registry API
+# --------------------------------------------------------------------- #
+def test_registry_has_all_required_backends():
+    for name in ("codec-pallas", "codec-xla", "flash", "hydragen", "ref"):
+        be = registry.get(name)
+        assert be.name == name
+        assert be.needs_plan
+        assert be.supports_gqa
+    assert registry.get("flash").plan_kind == "flash"
+    assert registry.get("hydragen").plan_kind == "codec"
+
+
+def test_registry_unknown_name_lists_known():
+    with pytest.raises(KeyError, match="hydragen"):
+        registry.get("nonexistent-backend")
+
+
+def test_registry_rejects_duplicate_registration():
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(registry.get("hydragen"))
+
+
+def test_registry_capability_filter():
+    assert set(registry.names(window=True)) == set(BACKENDS)
+    assert registry.names(gqa=True) == registry.names()
+
+
+# --------------------------------------------------------------------- #
+# every backend vs the dense oracle on the shared forest fixture
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_dense_oracle_shared_forest(backend):
+    f = tree_mod.two_level(4, 4 * PAGE, PAGE + 5, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8,
+                            max_kv_per_task=2 * PAGE)
+    out = registry.get(backend)(q, k_pool, v_pool, p)
+    np.testing.assert_allclose(out, _dense_expect(f, q, k_pool, v_pool),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (6, 1)])
+def test_backend_matches_oracle_gqa(backend, hq, hkv):
+    f = tree_mod.full_kary(3, 2, 2 * PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, hq=hq, hkv=hkv, key=3)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8)
+    out = registry.get(backend)(q, k_pool, v_pool, p)
+    np.testing.assert_allclose(out, _dense_expect(f, q, k_pool, v_pool),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_oracle_sliding_window(backend):
+    win = 24
+    f = tree_mod.two_level(3, 4 * PAGE, 2 * PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, key=5)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4, window=win)
+    out = registry.get(backend)(q, k_pool, v_pool, p, window=win)
+    np.testing.assert_allclose(
+        out, _dense_expect(f, q, k_pool, v_pool, window=win),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_matches_oracle_single_request(backend):
+    """Degenerate forest: one request, no sharing at all."""
+    f = tree_mod.two_level(1, 2 * PAGE, 7, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, key=7)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4)
+    out = registry.get(backend)(q, k_pool, v_pool, p)
+    np.testing.assert_allclose(out, _dense_expect(f, q, k_pool, v_pool),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_backend_partials_por_merge_with_tail():
+    """A backend's partials must be POR-mergeable: plan over a KV prefix
+    merged with dense attention over the rest == full attention (the
+    engine's frozen-plan + tail-page decomposition)."""
+    f = tree_mod.two_level(3, 2 * PAGE, 2 * PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, key=11)
+    # truncate each leaf's last page out of the plan (the "tail")
+    truncate = {}
+    tails = []
+    for r in f.request_ids:
+        leaf = f.nodes[f.leaf_of[r]]
+        ts = ((leaf.length - 1) // PAGE) * PAGE
+        truncate[leaf.id] = ts
+        tails.append((leaf, ts))
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8, truncate=truncate)
+    expect = _dense_expect(f, q, k_pool, v_pool)
+    for backend in BACKENDS:
+        be = registry.get(backend)
+        o_f, m_f, l_f = be.partials(q, k_pool, v_pool, p)
+        tp = np.asarray([leaf.page_ids[ts // PAGE] for leaf, ts in tails])
+        tb = jnp.asarray([leaf.start_pos + ts for leaf, ts in tails])
+        qp = jnp.asarray([f.context_len(r) - 1 for r in f.request_ids])
+        o_t, m_t, l_t = ops.single_page_attention(
+            q, k_pool[jnp.asarray(tp)], v_pool[jnp.asarray(tp)], tb, qp)
+        o, _, _ = ref.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
+        np.testing.assert_allclose(o, expect, rtol=1e-4, atol=1e-4,
+                                   err_msg=backend)
+
+
+# --------------------------------------------------------------------- #
+# hydragen decomposition internals
+# --------------------------------------------------------------------- #
+def test_hydragen_prepare_splits_by_sharing_degree():
+    f = tree_mod.two_level(4, 4 * PAGE, PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8)
+    ha = hydragen.prepare(p)
+    S, U = ha.px_pages.shape[0], ha.sf_pages.shape[0]
+    assert S + U == p.num_tasks
+    assert S >= 1        # the shared doc node
+    assert U == 4        # one private tail per request
+    assert bool((ha.px_qnum > 1).all())
+    # suffix segment ids are exactly the four query rows
+    assert sorted(np.asarray(ha.sf_seg).tolist()) == [0, 1, 2, 3]
+
+
+def test_hydragen_identical_prompts_prefix_only():
+    """All requests share everything: leaf tails are empty, the whole
+    batch is served by the prefix phase alone."""
+    f = tree_mod.PrefixForest(PAGE)
+    shared = f._new_node(tree_mod.ROOT_ID, 3 * PAGE, 0)
+    for r in range(3):
+        f.attach_request(r, f._new_node(shared.id, 0, shared.end_pos).id)
+    cm, k_pool, v_pool, q = _fixture(f, key=13)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8)
+    ha = hydragen.prepare(p)
+    assert ha.sf_pages.shape[0] == 0
+    out = registry.get("hydragen")(q, k_pool, v_pool, p)
+    np.testing.assert_allclose(out, _dense_expect(f, q, k_pool, v_pool),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# plan edge cases
+# --------------------------------------------------------------------- #
+def test_pad_plan_bucketing_rounds_to_pow2_and_is_invisible():
+    f = tree_mod.two_level(3, 3 * PAGE, PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, key=17)
+    p = plan_mod.build_plan(f, cm, num_lanes=2, max_q=8)
+    pp = plan_mod.pad_plan(p)
+    # default bucketing: steps rounded up to the next power of two
+    assert pp.max_steps == 1 << (p.max_steps - 1).bit_length()
+    assert pp.step_valid[:, p.max_steps:].sum() == 0
+    with pytest.raises(ValueError):
+        plan_mod.pad_plan(p, steps=p.max_steps - 1)
+    for backend in BACKENDS:
+        o1 = registry.get(backend)(q, k_pool, v_pool, p)
+        o2 = registry.get(backend)(q, k_pool, v_pool, pp)
+        np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5,
+                                   err_msg=backend)
+
+
+def test_window_pruning_drops_pages_and_relanes():
+    """A deep chain under a small window: wholly-invisible pages must be
+    pruned from the plan, lanes rebalanced, numerics unchanged."""
+    win = PAGE  # only the last page of each 6-page context is visible
+    f = tree_mod.two_level(3, 4 * PAGE, 2 * PAGE, PAGE)
+    cm, k_pool, v_pool, q = _fixture(f, key=19)
+    p_full = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4)
+    p_win = plan_mod.build_plan(f, cm, num_lanes=2, max_q=4, window=win)
+    assert p_win.step_valid.sum() < p_full.step_valid.sum()
+    # relane: every surviving subtask still has exactly one lane and the
+    # step arrays cover exactly the surviving pages
+    assert p_win.num_tasks < p_full.num_tasks or \
+        p_win.step_valid.sum() < p_full.step_valid.sum()
+    for backend in BACKENDS:
+        out = registry.get(backend)(q, k_pool, v_pool, p_win, window=win)
+        np.testing.assert_allclose(
+            out, _dense_expect(f, q, k_pool, v_pool, window=win),
+            rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_trash_row_flush_semantics():
+    """Step padding flushes must land in the trash row (or rewrite a
+    lane's final content) and never corrupt a live query — even with
+    heavily imbalanced lanes."""
+    # one giant node on one lane, tiny nodes elsewhere -> lots of padding
+    f = tree_mod.PrefixForest(PAGE)
+    big = f._new_node(tree_mod.ROOT_ID, 8 * PAGE, 0)
+    f.attach_request(0, f._new_node(big.id, 3, big.end_pos).id)
+    small = f._new_node(tree_mod.ROOT_ID, PAGE, 0)
+    f.attach_request(1, f._new_node(small.id, 2, small.end_pos).id)
+    cm, k_pool, v_pool, q = _fixture(f, key=23)
+    p = plan_mod.build_plan(f, cm, num_lanes=4, max_q=4,
+                            max_kv_per_task=None)
+    # lanes are imbalanced: some lane has padding steps
+    assert (p.step_valid.sum(1) < p.max_steps).any()
+    # padded steps reference the lane's last task or the trash row
+    trash = p.num_tasks
+    for lane in range(p.num_lanes):
+        pad = np.nonzero(p.step_valid[lane] == 0)[0]
+        for s in pad:
+            assert p.step_task[lane, s] == (p.step_task[lane, s - 1]
+                                            if s > 0 else trash)
+    # and numerics are exact for every backend incl. the pallas kernel
+    # whose padding steps physically re-flush output rows
+    for backend in BACKENDS:
+        out = registry.get(backend)(q, k_pool, v_pool, p)
+        assert bool(jnp.isfinite(out).all()), backend
+        np.testing.assert_allclose(out,
+                                   _dense_expect(f, q, k_pool, v_pool),
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)

@@ -1,9 +1,12 @@
-"""Task division + LPT scheduling properties (paper §5.1)."""
+"""Task division + LPT scheduling properties (paper §5.1).
+
+Deterministic hand-picked task sets always run; hypothesis widens the
+sweep when installed (budget set in conftest)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from conftest import HAVE_HYPOTHESIS
 from repro.core.cost_model import CostModel, HardwareSpec
 from repro.core.scheduler import (SubTask, TaskSpec, divide_and_schedule,
                                   divide_task, lpt, naive_divide)
@@ -12,18 +15,10 @@ from repro.core.scheduler import (SubTask, TaskSpec, divide_and_schedule,
 CM = CostModel(8, 2, 64, page_size=64)
 
 
-@st.composite
-def task_sets(draw):
-    t = draw(st.integers(1, 12))
-    return [TaskSpec(i + 1,
-                     draw(st.integers(1, 32)),
-                     draw(st.integers(1, 8192)))
-            for i in range(t)]
-
-
-@given(task_sets(), st.integers(1, 8))
-@settings(max_examples=60, deadline=None)
-def test_divide_and_schedule_coverage(tasks, lanes):
+# --------------------------------------------------------------------- #
+# property checks
+# --------------------------------------------------------------------- #
+def _check_coverage(tasks, lanes):
     sched = divide_and_schedule(tasks, CM, lanes, page_size=64)
     # every task's KV range is exactly partitioned by its subtasks
     by_node = {}
@@ -55,18 +50,13 @@ def test_divide_and_schedule_coverage(tasks, lanes):
     assert abs(max(lane_cost) - sched.makespan) < 1e-12
 
 
-@given(task_sets(), st.integers(2, 8))
-@settings(max_examples=40, deadline=None)
-def test_makespan_beats_or_matches_single_lane(tasks, lanes):
+def _check_makespan_beats_or_matches_single_lane(tasks, lanes):
     multi = divide_and_schedule(tasks, CM, lanes, page_size=64)
     single = divide_and_schedule(tasks, CM, 1, page_size=64)
     assert multi.makespan <= single.makespan * 1.001
 
 
-@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=40),
-       st.integers(1, 8))
-@settings(max_examples=60, deadline=None)
-def test_lpt_guarantee(costs, lanes):
+def _check_lpt_guarantee(costs, lanes):
     """List scheduling: makespan <= avg + max <= 2 x the trivial lower
     bound (Graham 1966 gives 4/3 vs OPT; vs the bound only 2x holds)."""
     subs = [SubTask(0, 0, 1, 0, 64, c) for c in costs]
@@ -75,6 +65,75 @@ def test_lpt_guarantee(costs, lanes):
     assert max(lane_cost) <= 2 * opt_lb + 1e-9
 
 
+# --------------------------------------------------------------------- #
+# deterministic hand-picked cases
+# --------------------------------------------------------------------- #
+FIXED_TASK_SETS = {
+    "single": [TaskSpec(1, 1, 64)],
+    "doc_qa": [TaskSpec(1, 32, 100_000)] + [
+        TaskSpec(i + 2, 1, 64) for i in range(7)],
+    "uniform": [TaskSpec(i + 1, 4, 2048) for i in range(6)],
+    "skewed": [TaskSpec(1, 16, 65536), TaskSpec(2, 2, 512),
+               TaskSpec(3, 1, 8191), TaskSpec(4, 32, 64)],
+    "unaligned": [TaskSpec(1, 3, 100), TaskSpec(2, 5, 63),
+                  TaskSpec(3, 7, 4097)],
+}
+
+
+@pytest.mark.parametrize("name", sorted(FIXED_TASK_SETS))
+@pytest.mark.parametrize("lanes", [1, 3, 8])
+def test_divide_and_schedule_coverage_fixed(name, lanes):
+    _check_coverage(FIXED_TASK_SETS[name], lanes)
+
+
+@pytest.mark.parametrize("name", sorted(FIXED_TASK_SETS))
+@pytest.mark.parametrize("lanes", [2, 8])
+def test_makespan_beats_or_matches_single_lane_fixed(name, lanes):
+    _check_makespan_beats_or_matches_single_lane(FIXED_TASK_SETS[name],
+                                                 lanes)
+
+
+@pytest.mark.parametrize("costs,lanes", [
+    ([1.0], 1),
+    ([5.0, 1.0, 1.0, 1.0, 1.0, 1.0], 3),
+    ([0.001, 10.0, 4.9, 5.1, 2.5, 2.5], 2),
+    (list(np.linspace(0.1, 3.0, 17)), 8),
+])
+def test_lpt_guarantee_fixed(costs, lanes):
+    _check_lpt_guarantee(costs, lanes)
+
+
+# --------------------------------------------------------------------- #
+# property-based sweeps (hypothesis only)
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, strategies as st
+
+    @st.composite
+    def task_sets(draw):
+        t = draw(st.integers(1, 12))
+        return [TaskSpec(i + 1,
+                         draw(st.integers(1, 32)),
+                         draw(st.integers(1, 8192)))
+                for i in range(t)]
+
+    @given(task_sets(), st.integers(1, 8))
+    def test_divide_and_schedule_coverage(tasks, lanes):
+        _check_coverage(tasks, lanes)
+
+    @given(task_sets(), st.integers(2, 8))
+    def test_makespan_beats_or_matches_single_lane(tasks, lanes):
+        _check_makespan_beats_or_matches_single_lane(tasks, lanes)
+
+    @given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=40),
+           st.integers(1, 8))
+    def test_lpt_guarantee(costs, lanes):
+        _check_lpt_guarantee(costs, lanes)
+
+
+# --------------------------------------------------------------------- #
+# fixed regressions
+# --------------------------------------------------------------------- #
 def test_divider_respects_caps():
     t = TaskSpec(1, 100, 10000)
     subs = divide_task(t, 3, CM, page_size=64, max_q=32)
