@@ -4,7 +4,10 @@ requests through the CoDec decode engine (the paper's deployment kind).
 Three question waves arrive against two shared documents (continuous
 batching); CoDec combines the shared KV reads, the plan is reused
 across steps, and the same run is repeated with the FlashDecoding
-backend to verify identical outputs and show the IO gap.
+backend to verify identical outputs and show the IO gap.  A final run
+deliberately undersizes the KV pool and enables chunked prefill: the
+engine preempts-and-recomputes instead of failing, and still produces
+byte-identical tokens.
 
     PYTHONPATH=src python examples/serve_docqa.py
 """
@@ -38,25 +41,26 @@ WAVE2 = questions(doc_b, 2)
 WAVE3 = questions(doc_a, 2)
 
 
-def run(backend: str):
-    eng = DecodeEngine(cfg, params, page_size=16, num_pages=2048,
-                       backend=backend, max_q=16, temperature=0.0)
+def run(backend: str, num_pages: int = 2048, **policy):
+    eng = DecodeEngine(cfg, params, page_size=16, num_pages=num_pages,
+                       backend=backend, max_q=16, temperature=0.0,
+                       **policy)
     t0 = time.time()
     # wave 1: three questions on doc A
     for p in WAVE1:
-        eng.add_request(p, max_new=8)
+        eng.add_request(p, max_new=12)
     for _ in range(3):
         eng.step()
     # wave 2 arrives mid-decode (continuous batching): doc B
     for p in WAVE2:
-        eng.add_request(p, max_new=8)
+        eng.add_request(p, max_new=12)
     # wave 3: more questions on doc A — its KV is already cached
     for p in WAVE3:
-        eng.add_request(p, max_new=8)
-    eng.run(16)
+        eng.add_request(p, max_new=12)
+    eng.run(48)
     dt = time.time() - t0
     st = eng.stats
-    print(f"[{backend}] {len(eng.requests)} requests, "
+    print(f"[{backend}@{num_pages}p] {len(eng.requests)} requests, "
           f"{st['steps']} decode steps in {dt:.1f}s; "
           f"prefill computed {st['prefill_tokens']} tokens "
           f"(prompts total {3 * 134 + 2 * 102 + 2 * 134}); "
@@ -66,6 +70,11 @@ def run(backend: str):
     print(f"    decode KV IO: {io_c / 1e3:.1f} KB/step vs "
           f"{io_f / 1e3:.1f} KB/step per-request "
           f"({io_f / io_c:.2f}x saved)")
+    if st["preempted"] or st["reclaimed"] or st["prefill_chunks"]:
+        print(f"    pressure: peak {eng.pool.allocator.peak_used}/"
+              f"{eng.pool.num_pages} pages, {st['preempted']} preemptions, "
+              f"{st['reclaimed']} reclaims, {st['recompute_tokens']} "
+              f"recomputed tokens, {st['prefill_chunks']} prefill chunks")
     return {r: req.generated for r, req in eng.requests.items()}
 
 
@@ -75,3 +84,11 @@ out_flash = run("flash")
 assert out_codec == out_flash == out_hydra, \
     "backends must produce identical tokens"
 print("codec == hydragen == flash outputs: OK")
+
+# memory pressure: a pool too small to hold all waves at once, plus
+# chunked prefill — same tokens, via preemption + recompute
+out_tight = run("codec-pallas", num_pages=13, prefill_chunk=32,
+                reserve_pages=0)
+assert out_tight == out_codec, \
+    "preempt-and-recompute must not change the tokens"
+print("undersized pool (preemption + chunked prefill) outputs: OK")

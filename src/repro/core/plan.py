@@ -112,6 +112,35 @@ def tasks_from_forest(forest: PrefixForest,
     return out
 
 
+def plan_key(forest: PrefixForest, rows: Sequence[int]) -> tuple:
+    """Hashable signature of everything a frozen plan depends on.
+
+    A cached plan stays valid exactly while this key is unchanged; the
+    engine rebuilds when it differs.  The key captures every invalidation
+    source in one place:
+
+    * **batch membership** — the ordered active row set (arrivals,
+      completions, *and evictions* all change it);
+    * **path structure** — the node ids along each active request's
+      prefix path (radix splits from new admissions, and node deletions
+      from eviction/release, change them);
+    * **tail boundary** — each leaf's full-page count: the plan truncates
+      the growing last page out, so it survives in-page growth and dies
+      when a leaf crosses a page boundary.
+
+    Per-step query-position advance is handled separately (the engine's
+    ``_advance_qpos``), not by rebuilding.
+    """
+    ps = forest.block_size
+    out = []
+    for r in rows:
+        path = forest.path(r)
+        leaf = path[-1] if path else None
+        tail = 0 if leaf is None else max(0, (leaf.length - 1) // ps)
+        out.append((r, tuple(n.id for n in path), tail))
+    return tuple(out)
+
+
 def assign_dense_pages(forest: PrefixForest) -> int:
     """Lay out every node's pages consecutively in a fresh pool.
 

@@ -24,7 +24,8 @@ for all workload-balancing decisions.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -74,6 +75,104 @@ class Schedule:
         for i, lane in enumerate(self.lane_of):
             out[lane].append(i)
         return out
+
+
+# --------------------------------------------------------------------- #
+# admission control (serving under memory pressure)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Queue policy for the engine's admit/prefill phase.
+
+    ``prefill_chunk``: per-step prefill token budget — ``None`` admits and
+    prefills whole prompts at once (the pre-pressure behaviour), an ``int``
+    is a fixed chunk, ``"auto"`` derives the chunk from the cost model so
+    one step's prefill work stays within ``balance_ratio`` times the
+    estimated decode-attention work of the running batch (chunked prefill
+    bounds time-between-tokens interference, not memory).
+
+    ``reserve_pages``: low watermark — admission never dips the free list
+    below it, keeping headroom for decode growth of the running batch.
+    ``max_running``: cap on admitted (prefilling + decoding) requests.
+    """
+
+    prefill_chunk: Optional[Union[int, str]] = None
+    reserve_pages: int = 0
+    max_running: Optional[int] = None
+    balance_ratio: float = 4.0
+    max_auto_chunk: int = 16384
+
+    def __post_init__(self):
+        pc = self.prefill_chunk
+        if isinstance(pc, str) and pc != "auto":
+            raise ValueError(f"prefill_chunk must be int, None or 'auto', "
+                             f"got {pc!r}")
+        if isinstance(pc, int) and pc < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+
+
+class AdmissionController:
+    """FCFS wait queue + cost-model-driven per-step prefill budget.
+
+    Preempted requests re-enter at the *front* (they were admitted
+    earliest; resuming them first preserves FCFS completion order and
+    bounds each request's preemption count).
+    """
+
+    def __init__(self, policy: AdmissionPolicy, cost_model: CostModel,
+                 page_size: int):
+        self.policy = policy
+        self.cost_model = cost_model
+        self.page_size = max(int(page_size), 1)
+        self.queue: Deque[int] = deque()
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def push(self, rid: int) -> None:
+        self.queue.append(rid)
+
+    def requeue(self, rid: int) -> None:
+        """Re-enter a preempted request at the head of the queue."""
+        self.queue.appendleft(rid)
+
+    def peek(self) -> Optional[int]:
+        return self.queue[0] if self.queue else None
+
+    def pop(self) -> int:
+        return self.queue.popleft()
+
+    def remove(self, rid: int) -> None:
+        try:
+            self.queue.remove(rid)
+        except ValueError:
+            pass
+
+    def prefill_budget(self, running_ctx: Sequence[int]) -> Optional[int]:
+        """Prefill token budget for one engine step (``None`` = unlimited).
+
+        In ``"auto"`` mode the budget is the largest page-aligned chunk
+        whose estimated attention cost stays within ``balance_ratio`` times
+        the running batch's decode-attention cost, so admitted prompts
+        cannot monopolise a step.  With nothing decoding there is nothing
+        to starve and the budget is unlimited.
+        """
+        pc = self.policy.prefill_chunk
+        if pc is None:
+            return None
+        if isinstance(pc, int):
+            return pc
+        if not running_ctx:
+            return None
+        decode_cost = sum(self.cost_model(1, max(c, 1)) for c in running_ctx)
+        target = self.policy.balance_ratio * decode_cost
+        mean_ctx = int(sum(running_ctx) / len(running_ctx))
+        chunk = self.page_size
+        while (chunk * 2 <= self.policy.max_auto_chunk
+               and self.cost_model(chunk * 2, mean_ctx + chunk * 2)
+               <= target):
+            chunk *= 2
+        return chunk
 
 
 # --------------------------------------------------------------------- #

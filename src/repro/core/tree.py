@@ -91,31 +91,33 @@ class PrefixForest:
             node.requests.append(request_id)
             nid = node.parent
 
+    def _match_child(self, cur: Node, remaining: np.ndarray):
+        """First child of ``cur`` sharing >= one full page with
+        ``remaining`` -> (child, page-aligned match length), else None.
+        The single sharing rule both insertion and pure matching follow."""
+        bs = self.block_size
+        for cid in cur.children:
+            child = self.nodes[cid]
+            if child.tokens is None or len(child.tokens) == 0:
+                continue
+            if child.tokens[0] != remaining[0]:
+                continue
+            m = (_common_prefix_len(child.tokens, remaining) // bs) * bs
+            if m > 0:
+                return child, m
+        return None
+
     def insert_tokens(self, request_id: int, tokens: np.ndarray) -> int:
         """Radix-insert a token sequence, sharing page-aligned prefixes.
 
         Returns the leaf node id holding this request's private tail.
         """
         tokens = np.asarray(tokens)
-        bs = self.block_size
         pos = 0
         cur = self.nodes[ROOT_ID]
         n = len(tokens)
         while pos < n:
-            remaining = tokens[pos:]
-            # find a child whose tokens share at least one full page
-            matched = None
-            for cid in cur.children:
-                child = self.nodes[cid]
-                if child.tokens is None or len(child.tokens) == 0:
-                    continue
-                if child.tokens[0] != remaining[0]:
-                    continue
-                m = _common_prefix_len(child.tokens, remaining)
-                m = (m // bs) * bs  # page-aligned sharing only
-                if m > 0:
-                    matched = (child, m)
-                    break
+            matched = self._match_child(cur, tokens[pos:])
             if matched is None:
                 break
             child, m = matched
@@ -130,6 +132,27 @@ class PrefixForest:
                               tail.copy() if len(tail) else np.zeros(0, tokens.dtype))
         self.attach_request(request_id, leaf.id)
         return leaf.id
+
+    def match_len(self, tokens: np.ndarray) -> int:
+        """Page-aligned length of the longest cached prefix of ``tokens``.
+
+        Pure query (no insertion/splitting): the admission controller uses
+        it to estimate how many *new* KV pages a prompt would need.
+        """
+        tokens = np.asarray(tokens)
+        pos = 0
+        cur = self.nodes[ROOT_ID]
+        n = len(tokens)
+        while pos < n:
+            matched = self._match_child(cur, tokens[pos:])
+            if matched is None:
+                break
+            child, m = matched
+            pos += m
+            if m < child.length:
+                break          # insertion would split here; match stops
+            cur = child
+        return pos
 
     def _split(self, node: Node, at: int) -> None:
         """Split ``node`` so its first ``at`` tokens become the parent part.

@@ -2,13 +2,21 @@
 
 Generates a synthetic document-QA workload (shared document prefix +
 per-request questions), serves it with the chosen attention backend, and
-reports TPOT + prefix-cache statistics.  ``--compare`` runs codec vs.
-the FlashDecoding baseline back-to-back (the paper's Fig. 7 setup).
+reports TPOT + prefix-cache + memory-pressure statistics.  ``--compare``
+runs codec vs. the FlashDecoding baseline back-to-back (the paper's
+Fig. 7 setup).  ``--max-pages`` sizes the paged KV pool — undersize it
+and the engine preempts-and-recomputes instead of failing;
+``--prefill-chunk`` (int or ``auto``) admits long prompts in chunks
+interleaved with decode steps.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --smoke --requests 4 --doc-len 256 --max-new 8 --compare
+
+    # memory-pressure demo: tiny pool + chunked prefill
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --smoke --max-pages 24 --prefill-chunk 32
 """
 
 from __future__ import annotations
@@ -16,6 +24,12 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+
+def _chunk(v: str):
+    if v in ("none", ""):
+        return None
+    return v if v == "auto" else int(v)
 
 
 def main() -> int:
@@ -31,6 +45,19 @@ def main() -> int:
     ap.add_argument("--q-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-pages", type=int, default=8192,
+                    help="KV pool size in pages; undersizing triggers "
+                         "preempt-and-recompute instead of MemoryError")
+    ap.add_argument("--prefill-chunk", type=_chunk, default=None,
+                    help="prefill token budget per step: int, 'auto' "
+                         "(cost-model-driven), or 'none' (whole prompt)")
+    ap.add_argument("--reserve-pages", type=int, default=0,
+                    help="admission low watermark: free pages kept back "
+                         "for decode growth of the running batch")
+    ap.add_argument("--max-running", type=int, default=None,
+                    help="cap on concurrently admitted requests")
+    ap.add_argument("--max-steps", type=int, default=0,
+                    help="engine step budget (0 = max-new + slack)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,17 +77,21 @@ def main() -> int:
     doc = rng.integers(0, cfg.vocab_size, args.doc_len).tolist()
     prompts = [doc + rng.integers(0, cfg.vocab_size, args.q_len).tolist()
                for _ in range(args.requests)]
+    max_steps = args.max_steps or 4 * args.max_new + 16
 
     def run(backend: str):
         eng = DecodeEngine(cfg, params, page_size=args.page_size,
-                           num_pages=8192, backend=backend,
-                           max_q=max(args.requests, 8), temperature=0.0)
+                           num_pages=args.max_pages, backend=backend,
+                           max_q=max(args.requests, 8), temperature=0.0,
+                           prefill_chunk=args.prefill_chunk,
+                           reserve_pages=args.reserve_pages,
+                           max_running=args.max_running)
         t0 = time.time()
         for p in prompts:
             eng.add_request(p, max_new=args.max_new)
         t_prefill = time.time() - t0
         t0 = time.time()
-        outs = eng.run(args.max_new)
+        outs = eng.run(max_steps)
         t_decode = time.time() - t0
         steps = eng.stats["steps"]
         io = eng.forest.codec_io_bytes(cfg.num_kv_heads, cfg.head_dim)
@@ -76,6 +107,18 @@ def main() -> int:
               f"per-request {io_flash / 1e6:.2f} MB "
               f"({io_flash / max(io, 1):.1f}x reduction, "
               f"mean sharing degree {eng.forest.mean_sharing_degree():.1f})")
+        st = eng.stats
+        peak = eng.pool.allocator.peak_used
+        print(f"    memory pressure: peak {peak}/{eng.pool.num_pages} pages "
+              f"({100 * peak / eng.pool.num_pages:.0f}%), "
+              f"{st['preempted']} preemptions, {st['reclaimed']} reclaims, "
+              f"{st['recompute_tokens']} recomputed tokens, "
+              f"{st['prefill_chunks']} prefill chunks")
+        unfinished = [r for r, q in eng.requests.items()
+                      if len(q.generated) < q.max_new]
+        if unfinished:
+            print(f"    WARNING: {len(unfinished)} requests unfinished "
+                  f"within {max_steps} steps: {unfinished}")
         return outs
 
     if args.compare:

@@ -1,16 +1,27 @@
 """Prefix-shared decode engine (the paper's vLLM-integration analogue).
 
-Continuous-batching decode loop with CoDec as the attention backend:
+Continuous-batching decode loop with CoDec as the attention backend,
+organised as a small per-step state machine — **admit → prefill →
+decode → evict** (DESIGN.md §6) — so the engine survives and exploits
+memory pressure instead of raising ``MemoryError``:
 
+* requests enter a FCFS **waiting queue**; admission is gated by a page
+  watermark and a cost-model prefill budget (``core.scheduler.
+  AdmissionController``), and long prompts are prefilled in **chunks**
+  interleaved with decode steps;
 * prompts are radix-inserted into a ``PrefixForest``; already-cached
   nodes are *not* recomputed (prefill prefix reuse) — only the new leaf's
   KV is computed, attending to the gathered cached prefix;
 * decode attention = **frozen CoDec plan** over all full pages (rebuilt
-  only when a leaf crosses a page boundary or batch membership changes —
-  the paper's "reuse a division plan for multiple decoding steps") POR-
-  merged with a **tail attention** over each request's growing last page;
-* KV pages live in a ``PagedKVPool``; pages of shared prefixes are
-  reference-counted and freed when the last request leaves;
+  exactly when ``core.plan.plan_key`` changes: batch membership, path
+  structure, or a leaf crossing a page boundary — the paper's "reuse a
+  division plan for multiple decoding steps") POR-merged with a **tail
+  attention** over each request's growing last page;
+* when the paged pool runs dry the engine **preempts and recomputes**:
+  the victim with the fewest generated tokens releases its non-shared
+  pages, its shared prefix nodes stay pinned (``node.meta["pins"]``
+  refcounts) and it re-enters the queue to be re-prefilled from the
+  radix-cached prefix;
 * Mamba layers (hybrid archs) keep per-request recurrent state, with
   end-of-node state caching so shared prefixes are also not recomputed
   for SSM mixers (the SSM analogue of prefix caching — see DESIGN.md §5);
@@ -20,13 +31,18 @@ Continuous-batching decode loop with CoDec as the attention backend:
   backend's ``prepare(plan)`` output is cached across steps and its
   ``partials`` are POR-merged with the tail-page attention — see
   DESIGN.md §2–§3 for the contract.
+
+Under greedy decoding the token streams are independent of memory
+pressure: a preempted-and-recomputed request produces exactly the same
+tokens as in an unconstrained run (asserted by the differential test
+harness).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +52,16 @@ from ..configs.base import LayerKind, ModelConfig
 from ..core import plan as plan_mod
 from ..core import tree as tree_mod
 from ..core.cost_model import CostModel
+from ..core.scheduler import AdmissionController, AdmissionPolicy
 from ..kernels import ops, ref as ref_mod, registry as registry_mod
 from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
 from . import sampler
 from .kv_cache import PagedKVPool
+
+# request lifecycle states
+WAITING, PREFILL, RUNNING, DONE = "waiting", "prefill", "running", "done"
 
 
 @dataclasses.dataclass
@@ -51,7 +71,20 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     pending: Optional[int] = None      # sampled, not yet appended
     max_new: int = 16
-    done: bool = False
+    state: str = WAITING
+    preemptions: int = 0
+    computed_hwm: int = 0              # highest position this request ever computed
+    pinned: List[int] = dataclasses.field(default_factory=list)
+    kv_freed: bool = False             # done + KV reclaimed under pressure
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    @property
+    def seq(self) -> List[int]:
+        """Full token sequence whose KV must be resident to decode."""
+        return self.prompt + self.generated
 
 
 def flat_layers(cfg: ModelConfig, params) -> List[Tuple[LayerKind, Dict]]:
@@ -73,7 +106,9 @@ class DecodeEngine:
                  num_lanes: int = 2, max_q: int = 32,
                  max_kv_per_task: int = 2048,
                  replan_interval: Optional[int] = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_chunk=None, reserve_pages: int = 0,
+                 max_running: Optional[int] = None):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -106,86 +141,383 @@ class DecodeEngine:
                                     max(cfg.num_kv_heads, 1),
                                     max(cfg.head_dim, 1),
                                     page_size=page_size)
+        self.policy = AdmissionPolicy(prefill_chunk=prefill_chunk,
+                                      reserve_pages=reserve_pages,
+                                      max_running=max_running)
+        self.admission = AdmissionController(self.policy, self.cost_model,
+                                             page_size)
+        self._prefilling: List[int] = []   # admitted, prompt not fully prefilled
         # mamba per-request state, keyed by layer index
         self.mamba_state: Dict[int, Any] = {}
+        # position the carried mamba state of a PREFILL request is valid at
+        self._mamba_pos: Dict[int, int] = {}
         # plans keyed by window size (0 = full attention)
         self._plans: Dict[int, Any] = {}
         self._plan_dirty = True
+        self._plan_key: Optional[tuple] = None
         self.replan_interval = replan_interval
         self._steps_since_plan = 0
         self.stats = {"steps": 0, "replans": 0, "plan_time": 0.0,
-                      "decode_time": 0.0, "prefill_tokens": 0}
+                      "decode_time": 0.0, "prefill_tokens": 0,
+                      "admitted": 0, "preempted": 0, "reclaimed": 0,
+                      "recompute_tokens": 0, "prefill_chunks": 0,
+                      "prefill_stalls": 0}
+        self.step_stats: List[Dict] = []
 
     # ------------------------------------------------------------------ #
-    # request admission / prefill with prefix reuse
+    # request admission (admit phase) + chunked prefill (prefill phase)
     # ------------------------------------------------------------------ #
     def add_request(self, prompt: List[int], max_new: int = 16) -> int:
+        """Enqueue a request; admits (and prefills) eagerly when memory
+        allows, so under no pressure this behaves like immediate prefill."""
+        need = -(-max(len(prompt), 1) // self.page_size)
+        if need > self.pool.num_pages:
+            raise MemoryError(
+                f"prompt needs {need} KV pages but the pool holds only "
+                f"{self.pool.num_pages}: it can never be admitted")
         rid = self._next_rid
         self._next_rid += 1
-        self.forest.insert_tokens(rid, np.asarray(prompt, np.int32))
         req = Request(rid, list(prompt), max_new=max_new)
         self.requests[rid] = req
-        self._ensure_pages(rid)
-        self._prefill(req)
-        self._plan_dirty = True
+        self.admission.push(rid)
+        self._admit_phase()
         return rid
 
-    def _ensure_pages(self, rid: int) -> None:
-        """Allocate pages for any node on the path lacking them."""
-        for node in self.forest.path(rid):
-            need = -(-max(node.length, 1) // self.page_size)
-            if len(node.page_ids) < need:
-                node.page_ids += self.pool.allocator.alloc(
-                    need - len(node.page_ids))
+    def has_work(self) -> bool:
+        return any(q.state in (WAITING, PREFILL, RUNNING)
+                   for q in self.requests.values())
 
-    def _gather_prefix(self, layer_attn: int, nodes) -> Tuple:
-        """Dense (ctx, n_kv, hd) for a list of filled nodes."""
+    def _live(self) -> List[int]:
+        return [r for r in sorted(self.requests)
+                if self.requests[r].state in (PREFILL, RUNNING)]
+
+    def _active_rows(self) -> List[int]:
+        return [r for r in sorted(self.requests)
+                if self.requests[r].state == RUNNING]
+
+    def _has_pages_for(self, req: Request) -> bool:
+        seq = req.seq
+        matched = self.forest.match_len(np.asarray(seq, np.int32))
+        need = (-(-max(len(seq), 1) // self.page_size)
+                - matched // self.page_size)
+        return self.pool.num_free - self.policy.reserve_pages >= need
+
+    def _admit_phase(self) -> None:
+        """Admission + chunked-prefill phase.
+
+        Continues admitted prefills first, then admits waiting requests
+        FCFS within the page watermark (reclaiming finished-request KV if
+        needed) and the per-step cost-model prefill budget.
+        """
+        running_ctx = [self.forest.context_len(r)
+                       for r in self._active_rows()]
+        budget = self.admission.prefill_budget(running_ctx)
+        spent = 0
+        # 1. advance chunked prefills already admitted
+        for rid in list(self._prefilling):
+            if budget is not None and spent >= budget:
+                return
+            req = self.requests[rid]
+            if req.state != PREFILL:       # preempted by an earlier prefill
+                continue
+            spent += self._prefill_step(
+                req, None if budget is None else budget - spent)
+        # 2. admit from the queue (FCFS; head-of-line blocks)
+        while len(self.admission):
+            if budget is not None and spent >= budget:
+                return
+            if (self.policy.max_running is not None
+                    and len(self._live()) >= self.policy.max_running):
+                return                      # capacity cap, not memory
+            head = self.requests[self.admission.peek()]
+            need_total = -(-max(len(head.seq), 1) // self.page_size)
+            if need_total > self.pool.num_pages:
+                raise MemoryError(
+                    f"request {head.rid} needs {need_total} KV pages but "
+                    f"the pool holds only {self.pool.num_pages}")
+            while not self._has_pages_for(head):
+                if not self._reclaim_one(set(), allow_preempt=False):
+                    return                  # no free memory: keep waiting
+            self.admission.pop()
+            self._admit(head)
+            spent += self._prefill_step(
+                head, None if budget is None else budget - spent)
+
+    def _admit(self, req: Request) -> None:
+        """(Re-)insert the request's sequence into the forest and release
+        the pins it held while waiting (its path now keeps those nodes
+        alive by membership)."""
+        self.forest.insert_tokens(req.rid,
+                                  np.asarray(req.seq, np.int32))
+        for nid in req.pinned:
+            node = self.forest.nodes.get(nid)
+            if node is not None:
+                node.meta["pins"] = node.meta.get("pins", 0) - 1
+                self._maybe_free_node(node)
+        req.pinned = []
+        req.state = PREFILL
+        self._prefilling.append(req.rid)
+        self.stats["admitted"] += 1
+
+    # ------------------------------------------------------------------ #
+    # eviction (evict phase) / reclamation
+    # ------------------------------------------------------------------ #
+    def _maybe_free_node(self, node) -> None:
+        """Free a node once nothing references it: no requests pass
+        through it, it has no children, and no evicted request pins it."""
+        if node.id == tree_mod.ROOT_ID or node.id not in self.forest.nodes:
+            return
+        if node.requests or node.children or node.meta.get("pins", 0) > 0:
+            return
+        if node.page_ids:
+            self.pool.allocator.release(node.page_ids)
+        parent = self.forest.nodes[node.parent]
+        parent.children.remove(node.id)
+        del self.forest.nodes[node.id]
+        self._maybe_free_node(parent)
+
+    def _release_kv(self, rid: int) -> None:
+        """Drop a request's forest footprint (finished or released)."""
+        for node in reversed(self.forest.path(rid)):
+            if node.id not in self.forest.nodes:
+                continue
+            node.requests.remove(rid)
+            self._maybe_free_node(node)
+        del self.forest.leaf_of[rid]
+        for st in self.mamba_state.values():
+            st.pop(rid, None)
+        self._mamba_pos.pop(rid, None)
+
+    def _preempt(self, rid: int) -> None:
+        """Evict a live request: release its non-shared pages, pin the
+        shared prefix nodes it leaves behind, and requeue it (front) to be
+        re-prefilled from the radix-cached prefix."""
+        req = self.requests[rid]
+        assert req.state in (PREFILL, RUNNING), req.state
+        if len(req.generated) >= req.max_new:
+            # generation already complete (evicted between its final append
+            # and the done transition): nothing to resume, just drop the KV
+            self._release_kv(rid)
+            if rid in self._prefilling:
+                self._prefilling.remove(rid)
+            req.state = DONE
+            req.kv_freed = True
+            self.stats["reclaimed"] += 1
+            return
+        pinned = []
+        for node in reversed(self.forest.path(rid)):
+            if node.id not in self.forest.nodes:
+                continue
+            node.requests.remove(rid)
+            if (node.requests or node.children
+                    or node.meta.get("pins", 0) > 0):
+                node.meta["pins"] = node.meta.get("pins", 0) + 1
+                pinned.append(node.id)
+            else:
+                if node.page_ids:
+                    self.pool.allocator.release(node.page_ids)
+                parent = self.forest.nodes[node.parent]
+                parent.children.remove(node.id)
+                del self.forest.nodes[node.id]
+        del self.forest.leaf_of[rid]
+        for st in self.mamba_state.values():
+            st.pop(rid, None)
+        self._mamba_pos.pop(rid, None)
+        if rid in self._prefilling:
+            self._prefilling.remove(rid)
+        req.pinned = pinned
+        req.state = WAITING
+        req.preemptions += 1
+        self.admission.requeue(rid)
+        self.stats["preempted"] += 1
+
+    def _reclaimable_pages(self, rid: int) -> int:
+        """Pages that preempting ``rid`` would free (its non-shared nodes)."""
+        n = 0
+        freeable: Set[int] = set()
+        for node in reversed(self.forest.path(rid)):
+            others = [r for r in node.requests if r != rid]
+            kids = set(node.children) - freeable
+            if others or kids or node.meta.get("pins", 0) > 0:
+                continue
+            freeable.add(node.id)
+            n += len(node.page_ids)
+        return n
+
+    def _reclaim_one(self, exclude: Set[int],
+                     allow_preempt: bool = True) -> bool:
+        """Free some pages, cheapest first: (1) finished-request KV,
+        (2) orphaned pinned nodes, (3) preempt the live victim with the
+        fewest generated tokens (ties: latest arrival)."""
+        for rid in sorted(self.requests):
+            q = self.requests[rid]
+            complete = (q.state == DONE
+                        or (q.state == RUNNING
+                            and len(q.generated) >= q.max_new))
+            if (complete and not q.kv_freed and rid not in exclude
+                    and rid in self.forest.leaf_of):
+                self._release_kv(rid)
+                q.state = DONE
+                q.kv_freed = True
+                self.stats["reclaimed"] += 1
+                return True
+        for rid in sorted(self.requests):
+            q = self.requests[rid]
+            if q.state != WAITING or not q.pinned:
+                continue
+            for nid in list(q.pinned):
+                node = self.forest.nodes.get(nid)
+                if node is None:
+                    q.pinned.remove(nid)
+                    continue
+                if not node.requests and not node.children:
+                    # drop this waiter's pin; the node frees once the last
+                    # pin goes (multiply-pinned nodes shed one pin per
+                    # holder until the final drop releases the pages)
+                    q.pinned.remove(nid)
+                    node.meta["pins"] = node.meta.get("pins", 0) - 1
+                    self._maybe_free_node(node)
+                    if nid not in self.forest.nodes:
+                        self.stats["reclaimed"] += 1
+                        return True
+        if not allow_preempt:
+            return False
+        victims = [r for r in sorted(self.requests)
+                   if self.requests[r].state in (PREFILL, RUNNING)
+                   and r not in exclude
+                   and self._reclaimable_pages(r) > 0]
+        if not victims:
+            return False
+        victim = min(victims,
+                     key=lambda r: (len(self.requests[r].generated), -r))
+        self._preempt(victim)
+        return True
+
+    def _alloc_pages(self, n: int, exclude: Set[int],
+                     allow_preempt: bool = True) -> Optional[List[int]]:
+        """Allocate ``n`` pages, evicting under pressure; ``None`` when
+        nothing more can be reclaimed (caller stalls or raises)."""
+        while self.pool.num_free < n:
+            if not self._reclaim_one(exclude, allow_preempt):
+                return None
+        return self.pool.allocator.alloc(n)
+
+    # ------------------------------------------------------------------ #
+    # prefill with prefix reuse (chunked, resumable)
+    # ------------------------------------------------------------------ #
+    def _ensure_pages_upto(self, rid: int, upto: int) -> bool:
+        """Allocate pages covering tokens [0, upto) of the path; False when
+        allocation stalls (partial allocations are kept for the retry)."""
+        for node in self.forest.path(rid):
+            cover = min(node.length, max(0, upto - node.start_pos))
+            need = -(-cover // self.page_size)
+            if len(node.page_ids) < need:
+                got = self._alloc_pages(need - len(node.page_ids),
+                                        exclude={rid})
+                if got is None:
+                    return False
+                node.page_ids += got
+        return True
+
+    def _gather_prefix_upto(self, layer_attn: int, path, upto: int) -> Tuple:
+        """Dense (upto, n_kv, hd) of the path's first ``upto`` cached tokens."""
         ks, vs = [], []
-        for node in nodes:
-            k, v = self.pool.gather_context(layer_attn, node.page_ids,
-                                            node.length)
+        pos = 0
+        for node in path:
+            take = min(node.length, upto - pos)
+            if take <= 0:
+                break
+            npg = -(-take // self.page_size)
+            k, v = self.pool.gather_context(layer_attn,
+                                            node.page_ids[:npg], take)
             ks.append(k)
             vs.append(v)
+            pos += take
         if not ks:
             hkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim
             z = jnp.zeros((0, hkv, hd), self.pool.k.dtype)
             return z, z
         return jnp.concatenate(ks, 0), jnp.concatenate(vs, 0)
 
-    def _prefill(self, req: Request) -> None:
-        """Compute KV (and SSM states) for the request's unfilled suffix.
+    def _promote(self, req: Request) -> None:
+        req.state = RUNNING
+        if req.rid in self._prefilling:
+            self._prefilling.remove(req.rid)
+        self._mamba_pos.pop(req.rid, None)
 
-        Attention KV of filled prefix nodes is reused (gathered from the
-        paged pool); SSM layers resume from the deepest node boundary with
-        a cached state and states are (re-)cached at every node boundary
+    def _prefill_step(self, req: Request, budget: Optional[int]) -> int:
+        """Advance the request's prefill by one chunk of ``<= budget``
+        tokens (``None`` = the whole remaining prompt); returns tokens
+        computed (0 = stalled on pages, retried next step).
+
+        Attention KV of the cached prefix is reused (gathered from the
+        paged pool); SSM layers resume from the deepest cached boundary —
+        the carried chunk state, else a node-boundary ``meta["ssm"]``
+        cache — and states are (re-)cached at every shared-node boundary
         inside the recomputed span so later siblings resume exactly.
+        When the sequence completes, the request joins the decode batch;
+        ``pending`` is sampled only if it did not survive a preemption.
         """
         cfg = self.cfg
-        path = self.forest.path(req.rid)
-        filled_nodes, todo = [], []
+        rid = req.rid
+        seq = req.seq
+        total = len(seq)
+        path = self.forest.path(rid)
+
+        # contiguous filled-KV front along the path
+        kv_filled = 0
         for node in path:
-            if node.meta.get("filled", 0) >= node.length and node.length > 0:
-                filled_nodes.append(node)
-            elif node.length > 0:
-                todo.append(node)
-        if not todo:
-            # fully cached prompt: recompute the last node to get logits
-            todo = [filled_nodes.pop()] if filled_nodes else []
-        ctx_start = sum(n.length for n in filled_nodes)
+            f = min(node.meta.get("filled", 0), node.length)
+            kv_filled += f
+            if f < node.length:
+                break
 
         has_mamba = any(k.mixer == "mamba" for k, _ in self.layers)
-        mamba_start = 0
+
+        if kv_filled < total:
+            attn_start = kv_filled
+        elif req.pending is None:
+            # fully cached prompt: recompute the last non-empty node so the
+            # final-position logits exist
+            last = next((n for n in reversed(path) if n.length > 0), None)
+            attn_start = total - (last.length if last is not None else 0)
+        else:
+            attn_start = total
+
         mamba_init: Dict[int, Any] = {}
+        mamba_start = 0
         if has_mamba:
-            pos = 0
-            for node in filled_nodes:
-                pos += node.length
-                if "ssm" in node.meta:
-                    mamba_start, mamba_init = pos, node.meta["ssm"]
-        span_start = min(ctx_start, mamba_start) if has_mamba else ctx_start
-        tokens = np.asarray(req.prompt[span_start:], np.int32)
+            carried = self._mamba_pos.get(rid)
+            if carried is not None and carried == attn_start:
+                mamba_start = carried
+                mamba_init = {j: st[rid]
+                              for j, st in self.mamba_state.items()
+                              if rid in st}
+            else:
+                pos = 0
+                for node in path:
+                    f = min(node.meta.get("filled", 0), node.length)
+                    pos += node.length
+                    if f < node.length or pos > attn_start:
+                        break
+                    if "ssm" in node.meta:
+                        mamba_start, mamba_init = pos, node.meta["ssm"]
+
+        if attn_start >= total and (not has_mamba or mamba_start >= total):
+            self._promote(req)
+            return 0
+
+        span_start = min(attn_start, mamba_start) if has_mamba \
+            else attn_start
+        end = total if budget is None else min(
+            total, max(span_start + max(budget, 1), kv_filled + 1))
+
+        if not self._ensure_pages_upto(rid, end):
+            self.stats["prefill_stalls"] += 1
+            return 0
+
+        tokens = np.asarray(seq[span_start:end], np.int32)
         Tn = len(tokens)
-        self.stats["prefill_tokens"] += Tn
         positions = (span_start + np.arange(Tn))[None]           # (1, Tn)
 
         # node segments covering the span (for KV writes + state caching)
@@ -193,15 +525,14 @@ class DecodeEngine:
         off = 0
         for node in path:
             lo = max(0, off - span_start)
-            hi = max(0, off + node.length - span_start)
+            hi = min(end, off + node.length) - span_start
             if hi > lo:
                 segments.append((node, lo, hi))
             off += node.length
 
         x = T._embed(self.params, cfg, jnp.asarray(tokens)[None],
                      jnp.asarray(positions))
-        prefix_nodes = [n for n in filled_nodes
-                        if n.end_pos <= span_start]   # attention KV to reuse
+        leaf_id = self.forest.leaf_of[rid]
 
         new_kv_writes = []  # (layer_attn, k (Tn,kv,hd), v)
         for j, (kind, p) in enumerate(self.layers):
@@ -212,7 +543,7 @@ class DecodeEngine:
                           else 0)
                 q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
                                                  jnp.asarray(positions))
-                pk, pv = self._gather_prefix(la, prefix_nodes)
+                pk, pv = self._gather_prefix_upto(la, path, span_start)
                 k_all = jnp.concatenate([pk.astype(k_new.dtype)[None],
                                          k_new], 1)
                 v_all = jnp.concatenate([pv.astype(v_new.dtype)[None],
@@ -220,7 +551,7 @@ class DecodeEngine:
                 o = L.mha(q, k_all, v_all, causal=True, window=window,
                           softcap=cfg.attn_logit_softcap,
                           q_positions=jnp.asarray(positions),
-                          kv_positions=jnp.arange(span_start + Tn)[None])
+                          kv_positions=jnp.arange(end)[None])
                 y = L.dense(p["attn"]["wo"],
                             o.reshape(1, Tn, cfg.num_heads * cfg.head_dim))
                 new_kv_writes.append((la, k_new[0], v_new[0]))
@@ -232,12 +563,14 @@ class DecodeEngine:
                     y_seg, state = self._mamba_prefill(p["mamba"],
                                                        h[:, lo:hi], state)
                     ys.append(y_seg)
-                    # cache the end-of-node state (shared nodes only; a
-                    # leaf's state keeps moving, cached per request below)
-                    if node.id != self.forest.leaf_of[req.rid]:
+                    # cache end-of-node state (shared nodes only, and only
+                    # when the chunk reaches the node boundary; a leaf's
+                    # state keeps moving, carried per request below)
+                    if (node.id != leaf_id
+                            and span_start + hi == node.end_pos):
                         node.meta.setdefault("ssm", {})[j] = state
                 y = jnp.concatenate(ys, 1)
-                self.mamba_state.setdefault(j, {})[req.rid] = state
+                self.mamba_state.setdefault(j, {})[rid] = state
                 x = x + y
             if kind.ffn != "none":
                 h2 = L.apply_norm(p["ln2"], x, cfg)
@@ -247,30 +580,44 @@ class DecodeEngine:
                     y2 = L.apply_mlp(p["ffn"], cfg, h2)
                 x = x + y2
 
-        # write new KV into unfilled pages only
+        # write new KV into unfilled page slots only
         offs, pages, kv_rows = [], [], []
+        ps = self.page_size
         for node, lo, hi in segments:
-            start = max(node.meta.get("filled", 0), 0)
-            node_lo_global = span_start + lo  # == node.start_pos
-            for t in range(node.length):
-                if t < start:
-                    continue
-                if lo + t >= hi:
-                    break
-                pages.append(node.page_ids[t // self.page_size])
-                offs.append(t % self.page_size)
-                kv_rows.append(lo + t)
-            node.meta["filled"] = node.length
+            start = node.meta.get("filled", 0)
+            base = node.start_pos - span_start   # span-local index of token 0
+            t_hi = hi - base
+            for t in range(max(start, lo - base), t_hi):
+                pages.append(node.page_ids[t // ps])
+                offs.append(t % ps)
+                kv_rows.append(base + t)
+            if t_hi > start:
+                node.meta["filled"] = t_hi
         if kv_rows:
             rows = jnp.asarray(np.asarray(kv_rows))
             for la, k_new, v_new in new_kv_writes:
                 self.pool.write_tokens(la, np.asarray(pages),
                                        np.asarray(offs),
                                        k_new[rows], v_new[rows])
-        logits = T._unembed(self.params, cfg, x)[0, -1]
-        self.key, sk = jax.random.split(self.key)
-        req.pending = int(sampler.sample(logits[None], sk,
-                                         self.temperature)[0])
+
+        self.stats["prefill_tokens"] += Tn
+        self.stats["recompute_tokens"] += max(
+            0, min(end, req.computed_hwm) - span_start)
+        req.computed_hwm = max(req.computed_hwm, end)
+
+        if end < total:
+            self.stats["prefill_chunks"] += 1
+            if has_mamba:
+                self._mamba_pos[rid] = end
+            return Tn
+
+        if req.pending is None:
+            logits = T._unembed(self.params, cfg, x)[0, -1]
+            self.key, sk = jax.random.split(self.key)
+            req.pending = int(sampler.sample(logits[None], sk,
+                                             self.temperature)[0])
+        self._promote(req)
+        return Tn
 
     def _mamba_prefill(self, p, h, init):
         cfg = self.cfg
@@ -313,9 +660,10 @@ class DecodeEngine:
                 ws.add(self.cfg.sliding_window)
         return sorted(ws)
 
-    def _active_rows(self) -> List[int]:
-        return [r for r in sorted(self.requests)
-                if not self.requests[r].done]
+    @property
+    def plan_rebuilds(self) -> int:
+        """Rebuild counter (the plan-lifecycle tests consume this)."""
+        return self.stats["replans"]
 
     def _rebuild_plans(self) -> None:
         t0 = time.perf_counter()
@@ -337,7 +685,7 @@ class DecodeEngine:
                 truncate=truncate)
             p = plan_mod.pad_plan(p)
             self._plans[w] = (p, self._backend.prepare(p))
-        self._rows = rows
+        self._plan_key = plan_mod.plan_key(self.forest, rows)
         self._plan_dirty = False
         self._steps_since_plan = 0
         self.stats["replans"] += 1
@@ -352,30 +700,71 @@ class DecodeEngine:
             self._plans[w] = (p, self._backend.prepare(p))
 
     # ------------------------------------------------------------------ #
-    # decode step
+    # decode step (admit -> prefill -> decode -> evict state machine)
     # ------------------------------------------------------------------ #
     def step(self) -> Dict[int, int]:
-        """Append pending tokens, decode one new token per active request."""
+        """One engine step: admission + chunked prefill, then append
+        pending tokens (evicting under pressure) and decode one token per
+        running request."""
+        snap = {k: self.stats[k]
+                for k in ("admitted", "preempted", "reclaimed",
+                          "prefill_tokens", "recompute_tokens")}
+        self._admit_phase()
+        out = self._decode_phase()
+        self.step_stats.append({
+            "step": len(self.step_stats),
+            "decoded": len(out),
+            "admitted": self.stats["admitted"] - snap["admitted"],
+            "preempted": self.stats["preempted"] - snap["preempted"],
+            "reclaimed": self.stats["reclaimed"] - snap["reclaimed"],
+            "prefill_tokens": (self.stats["prefill_tokens"]
+                               - snap["prefill_tokens"]),
+            "recompute_tokens": (self.stats["recompute_tokens"]
+                                 - snap["recompute_tokens"]),
+            "waiting": len(self.admission),
+            "prefilling": len(self._prefilling),
+            "running": len(self._active_rows()),
+            "pages_free": self.pool.num_free,
+            "occupancy": self.pool.occupancy(),
+        })
+        return out
+
+    def _decode_phase(self) -> Dict[int, int]:
         cfg = self.cfg
-        rows = self._active_rows()
-        if not rows:
+        rows0 = self._active_rows()
+        if not rows0:
             return {}
         t0 = time.perf_counter()
-        # 1. append pending tokens to leaves (grow pages as needed)
-        tokens = []
-        for r in rows:
+        # 1. append pending tokens to leaves; grow tail pages, preempting
+        #    the fewest-generated victim when the pool runs dry
+        for r in rows0:
             req = self.requests[r]
+            if req.state != RUNNING:   # evicted growing an earlier row
+                continue
             tok = req.pending
             self.forest.append_token(r, tok)
             leaf = self.forest.nodes[self.forest.leaf_of[r]]
             if -(-leaf.length // self.page_size) > len(leaf.page_ids):
-                leaf.page_ids += self.pool.allocator.alloc(1)
-                self._plan_dirty = True
-            tokens.append(tok)
+                got = self._alloc_pages(1, exclude={r})
+                if got is None:
+                    raise MemoryError(
+                        f"KV pool exhausted growing request {r}: nothing "
+                        f"left to evict (pool smaller than the working set)")
+                leaf.page_ids += got
+            req.generated.append(tok)
+            req.pending = None
+        rows = self._active_rows()
+        if not rows:
+            return {}
+        tokens = [self.requests[r].generated[-1] for r in rows]
+
+        # 2. plan lifecycle: rebuild exactly when the plan key changed
+        #    (membership, path structure, tail page) or on the interval
         if (self.replan_interval is not None
                 and self._steps_since_plan >= self.replan_interval):
             self._plan_dirty = True
-        if self._plan_dirty or rows != getattr(self, "_rows", None):
+        if (self._plan_dirty
+                or plan_mod.plan_key(self.forest, rows) != self._plan_key):
             self._rebuild_plans()
         else:
             self._advance_qpos()
@@ -439,12 +828,11 @@ class DecodeEngine:
         out = {}
         for i, r in enumerate(rows):
             req = self.requests[r]
-            req.generated.append(int(tokens[i]))
             req.pending = int(toks[i])
+            req.computed_hwm = max(req.computed_hwm, int(ctx[i]))
             out[r] = int(toks[i])
             if len(req.generated) >= req.max_new:
-                req.done = True
-                self._plan_dirty = True
+                req.state = DONE
         self.stats["steps"] += 1
         self.stats["decode_time"] += time.perf_counter() - t0
         return out
@@ -466,22 +854,23 @@ class DecodeEngine:
     # ------------------------------------------------------------------ #
     def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
         for _ in range(max_steps):
-            if not self.step():
+            if not self.has_work():
                 break
+            self.step()
         return {r: req.generated for r, req in self.requests.items()}
 
     def release(self, rid: int) -> None:
         req = self.requests.pop(rid)
-        leaf = self.forest.leaf_of[rid]
-        # pages of nodes used only by this request are freed
-        for node in reversed(self.forest.path(rid)):
-            node.requests.remove(rid)
-            if not node.requests and not node.children:
-                self.pool.allocator.release(node.page_ids)
-                parent = self.forest.nodes[node.parent]
-                parent.children.remove(node.id)
-                del self.forest.nodes[node.id]
-        del self.forest.leaf_of[rid]
-        for st in self.mamba_state.values():
-            st.pop(rid, None)
-        self._plan_dirty = True
+        if req.state == WAITING:
+            self.admission.remove(rid)
+            for nid in req.pinned:
+                node = self.forest.nodes.get(nid)
+                if node is not None:
+                    node.meta["pins"] = node.meta.get("pins", 0) - 1
+                    self._maybe_free_node(node)
+            req.pinned = []
+            return
+        if rid in self._prefilling:
+            self._prefilling.remove(rid)
+        if rid in self.forest.leaf_of:
+            self._release_kv(rid)

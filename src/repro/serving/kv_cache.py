@@ -22,10 +22,20 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refs: Dict[int, int] = {}
+        # accounting (watermarks / eviction diagnostics)
+        self.peak_used = 0
+        self.total_allocs = 0
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._refs)
+
+    def occupancy(self) -> float:
+        return self.num_used / max(self.num_pages, 1)
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -34,18 +44,38 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        self.total_allocs += n
+        self.peak_used = max(self.peak_used, self.num_used)
         return pages
 
     def retain(self, pages: List[int]) -> None:
         for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"retain of unallocated page id {p}")
             self._refs[p] += 1
 
     def release(self, pages: List[int]) -> None:
         for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"release of unallocated page id {p}")
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 del self._refs[p]
                 self._free.append(p)
+
+    def check(self) -> None:
+        """Structural invariants (tests call this after workloads)."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate page ids on the free list")
+        if free & set(self._refs):
+            raise AssertionError("page both free and referenced")
+        if len(free) + len(self._refs) != self.num_pages:
+            raise AssertionError(
+                f"page partition broken: {len(free)} free + "
+                f"{len(self._refs)} used != {self.num_pages}")
+        if any(r <= 0 for r in self._refs.values()):
+            raise AssertionError("non-positive refcount")
 
 
 class PagedKVPool:
@@ -54,11 +84,19 @@ class PagedKVPool:
     def __init__(self, n_layers: int, num_pages: int, page_size: int,
                  n_kv: int, head_dim: int, dtype=jnp.float32):
         self.n_layers = n_layers
+        self.num_pages = num_pages
         self.page_size = page_size
         self.k = jnp.zeros((n_layers, num_pages, page_size, n_kv, head_dim),
                            dtype)
         self.v = jnp.zeros_like(self.k)
         self.allocator = PageAllocator(num_pages)
+
+    @property
+    def num_free(self) -> int:
+        return self.allocator.num_free
+
+    def occupancy(self) -> float:
+        return self.allocator.occupancy()
 
     def layer_pools(self, layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self.k[layer], self.v[layer]

@@ -133,6 +133,174 @@ def test_page_allocator_refcounts():
     assert a.num_free == 8
 
 
+def test_page_allocator_unknown_page_is_value_error():
+    """Regression: release/retain of a never-allocated (or double-freed)
+    page id must raise a clear ValueError, not KeyError."""
+    a = PageAllocator(4)
+    with pytest.raises(ValueError):
+        a.release([0])
+    with pytest.raises(ValueError):
+        a.retain([3])
+    pages = a.alloc(2)
+    a.release(pages)
+    with pytest.raises(ValueError):
+        a.release(pages)        # double free
+    a.check()
+
+
+def test_page_allocator_watermarks_and_check():
+    a = PageAllocator(6)
+    p1 = a.alloc(4)
+    assert (a.num_used, a.peak_used, a.total_allocs) == (4, 4, 4)
+    a.release(p1[:3])
+    p2 = a.alloc(2)
+    assert a.peak_used == 4 and a.num_used == 3
+    assert abs(a.occupancy() - 3 / 6) < 1e-12
+    a.check()
+    with pytest.raises(MemoryError):
+        a.alloc(a.num_free + 1)
+    a.release(p1[3:])
+    a.release(p2)
+    assert a.num_free == 6
+    a.check()
+
+
+def test_exhaustion_preempts_and_leaves_no_leaks():
+    """Pool exhaustion -> preemption path: an undersized pool completes
+    all requests, and after releasing everything no pages are leaked and
+    no refcounts dangle (with eviction in the mix)."""
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=8, num_pages=9)
+    doc = list(range(10, 58))
+    for i in range(4):
+        eng.add_request(doc + [100 + 3 * i + j for j in range(3)],
+                        max_new=6)
+    outs = eng.run(64)
+    assert all(len(v) == 6 for v in outs.values())
+    assert eng.stats["preempted"] >= 1
+    assert eng.stats["recompute_tokens"] >= 1
+    assert eng.pool.allocator.peak_used == 9
+    for r in list(eng.requests):
+        eng.release(r)
+    assert eng.pool.allocator.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+    assert set(eng.forest.nodes) == {0}
+
+
+def test_release_of_preempted_request_unpins_cache():
+    """Releasing a request while it waits (preempted, holding pins on the
+    shared prefix) must unwind the pins so nothing leaks."""
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=8, num_pages=64)
+    doc = list(range(10, 42))                   # 32 tokens, page-aligned
+    r0 = eng.add_request(doc + [1, 2], max_new=4)
+    r1 = eng.add_request(doc + [3, 4], max_new=4)
+    eng.step()
+    eng._preempt(r1)
+    assert eng.requests[r1].state == "waiting"
+    assert eng.requests[r1].pinned              # shared doc node pinned
+    eng.release(r1)                             # cancelled before resuming
+    outs = eng.run(16)
+    assert len(outs[r0]) == 4 and r1 not in outs
+    eng.release(r0)
+    assert eng.pool.allocator.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+    assert set(eng.forest.nodes) == {0}
+
+
+def test_multiply_pinned_nodes_are_reclaimable():
+    """A cache node pinned by TWO waiting requests must still be
+    reclaimable under pressure (one pin dropped per holder until the
+    last drop frees the pages)."""
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=8, num_pages=10)
+    doc = list(range(10, 42))                   # 4 pages
+    r0 = eng.add_request(doc + [1, 2], max_new=4)
+    r1 = eng.add_request(doc + [3, 4], max_new=4)
+    eng.step()
+    eng._preempt(r0)
+    eng._preempt(r1)
+    shared = [n for n in eng.forest.real_nodes()
+              if n.meta.get("pins", 0) > 0]
+    assert shared and shared[0].meta["pins"] == 2
+    assert eng.pool.num_free == 6              # 4 doc pages still pinned
+    # regression: one reclamation call (what decode growth issues under
+    # pressure) must shed both holders' pins and free the doc pages —
+    # previously a pins==2 node was skipped and the pool deadlocked
+    assert eng._reclaim_one(set(), allow_preempt=False)
+    assert eng.pool.num_free == eng.pool.num_pages
+    assert shared[0].id not in eng.forest.nodes
+    assert not eng.requests[r0].pinned and not eng.requests[r1].pinned
+    # both holders resume with a full recompute and finish identically
+    outs = eng.run(64)
+    assert all(len(outs[r]) == 4 for r in (r0, r1))
+    assert eng.stats["recompute_tokens"] > 0
+    for r in list(eng.requests):
+        eng.release(r)
+    assert eng.pool.allocator.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+
+
+def test_max_running_cap_does_not_destroy_cache():
+    """A max_running rejection is a capacity cap, not memory pressure:
+    it must not reclaim finished-request KV (the radix cache)."""
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=8, num_pages=512,
+                               max_running=1)
+    doc = list(range(10, 42))
+    rA = eng.add_request(doc + [1], max_new=2)
+    eng.run(8)                                  # A done, KV stays cached
+    rB = eng.add_request(list(range(200, 248)), max_new=4)
+    before = eng.stats["prefill_tokens"]
+    rC = eng.add_request(doc + [2], max_new=2)  # blocked by the cap only
+    assert eng.requests[rC].state == "waiting"
+    assert eng.stats["reclaimed"] == 0
+    eng.run(16)
+    assert eng.stats["reclaimed"] == 0
+    assert len(eng.requests[rC].generated) == 2
+    # C reused A's cached doc: only its private tail was prefilled
+    assert eng.stats["prefill_tokens"] - before == 1
+
+
+def test_plan_rebuilt_exactly_on_lifecycle_events():
+    """The frozen plan is reused across steps and rebuilt exactly when a
+    leaf crosses a page boundary, batch membership changes, or a request
+    is evicted (counted via the engine's rebuild counter).
+
+    A leaf crosses when its pre-append length is page-aligned; prompt
+    lengths are chosen so both leaves cross on the same steps.
+    """
+    ps = 4
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=ps, num_pages=256,
+                               backend="codec-xla")
+    r0 = eng.add_request(list(range(10, 20)), max_new=32)  # leaf len 10
+    assert eng.plan_rebuilds == 0          # plans are built lazily
+    expected = 0
+    for s, pre_len in enumerate(range(10, 16)):
+        eng.step()
+        expected += 1 if (s == 0 or pre_len % ps == 0) else 0
+        assert eng.plan_rebuilds == expected, f"step {s}"
+    # membership change: a new request joins (radix split of r0's leaf at
+    # the 8-token boundary; r1's private leaf = 4 tokens, page-aligned
+    # with r0's leaf (len 16), so they keep crossing on the same steps)
+    r1 = eng.add_request(list(range(10, 20)) + [77, 78], max_new=32)
+    eng.step()
+    expected += 1
+    assert eng.plan_rebuilds == expected
+    # in-page growth reuses the plan for 3 steps, then both leaves cross
+    for k, pre_len in enumerate(range(17, 21)):
+        eng.step()
+        expected += 1 if pre_len % ps == 0 else 0
+        assert eng.plan_rebuilds == expected, f"growth step {k}"
+    # eviction invalidates the plan: the victim leaves the batch and
+    # resumes in the same engine step with a fresh private leaf
+    eng._preempt(r0)
+    assert eng.requests[r0].state == "waiting"
+    eng.step()
+    expected += 1
+    assert eng.plan_rebuilds == expected
+    # the workload still completes exactly
+    eng.run(64)
+    assert len(eng.requests[r0].generated) == 32
+    assert len(eng.requests[r1].generated) == 32
+
+
 def test_staggered_finish_and_late_arrivals():
     """Requests finishing at different times + continuous batching:
     plans must be rebuilt over the ACTIVE set only (regression: finished

@@ -158,3 +158,30 @@ def test_shared_ratio_builder_hits_target():
     s = max(n.length for n in f.real_nodes())
     total = f.total_tokens()
     assert abs(s / total - 0.8) < 0.1
+
+
+# --------------------------------------------------------------------- #
+# non-mutating radix match (admission-controller page estimation)
+# --------------------------------------------------------------------- #
+def test_match_len_is_page_aligned_and_pure():
+    bs = 8
+    f = tree_mod.PrefixForest(bs)
+    doc = np.arange(100, 148, dtype=np.int32)          # 48 tokens, 6 pages
+    f.insert_tokens(0, np.concatenate([doc, [1, 2, 3]]))
+
+    def snapshot():
+        return {k: (v.length, tuple(v.children)) for k, v in f.nodes.items()}
+
+    before = snapshot()
+    # full page-aligned prefix of an inserted sequence matches
+    assert f.match_len(np.concatenate([doc, [9, 9]])) == 48
+    # partial overlap matches only whole pages
+    assert f.match_len(doc[:20]) == 16
+    # mismatch on the first token matches nothing
+    assert f.match_len(np.arange(500, 520, dtype=np.int32)) == 0
+    # pure: the queries above caused no splits and created no nodes
+    assert snapshot() == before
+    f.validate()
+    # match descends across chained nodes created by a split
+    f.insert_tokens(1, np.concatenate([doc[:16], [7, 8]]))
+    assert f.match_len(np.concatenate([doc, [1, 2, 3, 4]])) == 48

@@ -8,7 +8,8 @@ import pytest
 
 from conftest import HAVE_HYPOTHESIS
 from repro.core.cost_model import CostModel, HardwareSpec
-from repro.core.scheduler import (SubTask, TaskSpec, divide_and_schedule,
+from repro.core.scheduler import (AdmissionController, AdmissionPolicy,
+                                  SubTask, TaskSpec, divide_and_schedule,
                                   divide_task, lpt, naive_divide)
 
 
@@ -166,3 +167,60 @@ def test_cost_lower_bound_holds():
     sched = divide_and_schedule(tasks, CM, 4, 64)
     total = sum(CM(t.n_q, t.n) for t in tasks)
     assert sched.makespan >= total / 4 * 0.999  # Eq. 4
+
+
+# --------------------------------------------------------------------- #
+# admission control (serving under memory pressure)
+# --------------------------------------------------------------------- #
+def _controller(**kw):
+    return AdmissionController(AdmissionPolicy(**kw), CM, page_size=64)
+
+
+def test_admission_policy_validation():
+    with pytest.raises(ValueError):
+        AdmissionPolicy(prefill_chunk="bogus")
+    with pytest.raises(ValueError):
+        AdmissionPolicy(prefill_chunk=0)
+    AdmissionPolicy(prefill_chunk="auto")
+    AdmissionPolicy(prefill_chunk=128)
+
+
+def test_admission_queue_is_fcfs_with_preempted_at_front():
+    c = _controller()
+    for r in (0, 1, 2):
+        c.push(r)
+    assert c.pop() == 0
+    c.requeue(0)                      # preempted: back to the head
+    assert [c.pop() for _ in range(3)] == [0, 1, 2]
+    c.push(5)
+    c.remove(5)
+    c.remove(5)                       # removing a missing rid is a no-op
+    assert len(c) == 0
+
+
+def test_prefill_budget_modes():
+    # None -> unlimited; fixed int -> that chunk
+    assert _controller().prefill_budget([128, 256]) is None
+    assert _controller(prefill_chunk=96).prefill_budget([128]) == 96
+    auto = _controller(prefill_chunk="auto")
+    # nothing decoding: nothing to starve, budget unlimited
+    assert auto.prefill_budget([]) is None
+    b = auto.prefill_budget([256] * 4)
+    assert b is not None and b >= 64          # at least one page
+    assert b <= AdmissionPolicy().max_auto_chunk
+
+
+def test_auto_budget_scales_with_decode_batch():
+    """A heavier decode batch affords a larger interleaved prefill chunk
+    (the budget is a fraction of the decode-step cost, Sarathi-style)."""
+    auto = _controller(prefill_chunk="auto")
+    small = auto.prefill_budget([128])
+    large = auto.prefill_budget([4096] * 16)
+    assert large >= small
+    # and the chunk's cost really is bounded by the balance ratio
+    ctx = [4096] * 16
+    decode_cost = sum(CM(1, c) for c in ctx)
+    mean_ctx = int(sum(ctx) / len(ctx))
+    if large > 64:   # cost bound only binds above the one-page floor
+        assert CM(large, mean_ctx + large) <= \
+            AdmissionPolicy().balance_ratio * decode_cost * 2.01
