@@ -1,0 +1,118 @@
+"""Decode-trajectory benchmark: fused vs eager TPOT + baseline artifact.
+
+Drives the SAME doc-QA forest through the eager per-layer decode loop
+and the fused single-dispatch step (``serving/step_fn.py``) and writes a
+``BENCH_decode.json`` trajectory artifact — TPOT, steps/s, fused compile
+count, plan-rebuild count, per-step stats — so future PRs have a perf
+baseline to regress against.
+
+Each engine runs two passes over the same shared document (the second
+pass re-uses the radix-cached prefix AND the warm jit cache, so it is
+steady-state decode); the reported TPOT comes from the warm pass.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import DecodeEngine
+
+ARCH = os.environ.get("BENCH_DECODE_ARCH", "qwen2.5-14b")
+BACKEND = os.environ.get("BENCH_DECODE_BACKEND", "codec-xla")
+OUT = os.environ.get("BENCH_DECODE_OUT", "BENCH_decode.json")
+PAGE = 16
+DOC_LEN = 96
+REQUESTS = 4
+MAX_NEW = 16
+
+
+def _snapshot(eng):
+    keys = ("steps", "replans", "decode_time", "decode_dispatch_time",
+            "decode_sync_time", "token_flushes", "fused_calls",
+            "prefill_tokens")
+    return {k: eng.stats[k] for k in keys}
+
+
+def _delta(a, b):
+    return {k: b[k] - a[k] for k in a}
+
+
+def _drive(eng, prompts):
+    """Prefill the batch, then time the pure decode stream (prefill and
+    its jit compiles are real but are not TPOT; the first step absorbs
+    them plus the first plan epoch)."""
+    for p in prompts:
+        eng.add_request(p, max_new=MAX_NEW)
+    eng.step()
+    t0 = time.perf_counter()
+    while eng.has_work():
+        eng.step()
+    eng.flush_tokens()
+    jax.block_until_ready(eng.pool.k)
+    return time.perf_counter() - t0
+
+
+def run_engine(cfg, params, doc, fused):
+    eng = DecodeEngine(cfg, params, page_size=PAGE, num_pages=2048,
+                       backend=BACKEND, max_q=max(REQUESTS, 8),
+                       temperature=0.0, fused=fused)
+    passes = []
+    for pno in range(2):
+        prompts = [doc + [200 + 16 * pno + 4 * i + j for j in range(4)]
+                   for i in range(REQUESTS)]
+        before = _snapshot(eng)
+        steps0 = len(eng.step_stats)
+        wall = _drive(eng, prompts)
+        d = _delta(before, _snapshot(eng))
+        steps = max(d["steps"] - 1, 1)          # first step untimed
+        d["wall_s"] = wall
+        d["tpot_ms"] = wall / steps * 1e3
+        d["steps_per_s"] = steps / max(wall, 1e-9)
+        d["trajectory"] = eng.step_stats[steps0:]
+        passes.append(d)
+    warm = passes[1]
+    warm["compile_count"] = eng.fused_cache_size
+    warm["bucket_signatures"] = len(eng.bucket_signatures)
+    warm["fused_active"] = eng.fused
+    return passes
+
+
+def main() -> None:
+    cfg = smoke_config(ARCH)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    doc = list(range(10, 10 + DOC_LEN))
+    result = {"arch": ARCH, "backend": BACKEND,
+              "config": dict(page_size=PAGE, doc_len=DOC_LEN,
+                             requests=REQUESTS, max_new=MAX_NEW)}
+    for name, fused in (("eager", False), ("fused", True)):
+        cold, warm = run_engine(cfg, params, doc, fused)
+        result[name] = {"cold": {k: v for k, v in cold.items()
+                                 if k != "trajectory"},
+                        **{k: v for k, v in warm.items()
+                           if k != "trajectory"},
+                        "trajectory": warm["trajectory"]}
+        emit("decode_trajectory", name,
+             us_per_call=warm["tpot_ms"] * 1e3,
+             tpot_ms=warm["tpot_ms"], steps_per_s=warm["steps_per_s"],
+             steps=warm["steps"], replans=warm["replans"],
+             compiles=warm.get("compile_count", 0))
+    speedup = (result["eager"]["tpot_ms"]
+               / max(result["fused"]["tpot_ms"], 1e-9))
+    result["fused_speedup"] = speedup
+    emit("decode_trajectory", "speedup", fused_over_eager=speedup)
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {OUT}: fused TPOT {result['fused']['tpot_ms']:.2f} ms "
+          f"vs eager {result['eager']['tpot_ms']:.2f} ms "
+          f"({speedup:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,10 @@
 
 ``python -m benchmarks.run [module ...]`` — runs all by default and
 prints ``bench,name,us_per_call,derived`` CSV lines.
+
+``--preset smoke`` runs the CI-sized decode-trajectory benchmark only
+(fused vs eager TPOT) and writes the ``BENCH_decode.json`` perf-baseline
+artifact.
 """
 
 from __future__ import annotations
@@ -23,11 +27,24 @@ MODULES = [
     "fig12_hardware",        # Fig. 12 (hardware sweep analogue)
     "fig13_variants",        # Fig. 13
     "roofline",              # EXPERIMENTS.md §Roofline source
+    "decode_trajectory",     # fused-vs-eager TPOT baseline artifact
 ]
+
+PRESETS = {
+    # smoke: the e2e decode baseline CI regresses against
+    "smoke": ["decode_trajectory"],
+}
 
 
 def main() -> int:
-    mods = sys.argv[1:] or MODULES
+    args = sys.argv[1:]
+    if args[:1] == ["--preset"]:
+        if len(args) < 2 or args[1] not in PRESETS:
+            print(f"usage: --preset {{{','.join(PRESETS)}}}")
+            return 2
+        mods = PRESETS[args[1]] + args[2:]
+    else:
+        mods = args or MODULES
     print("bench,name,us_per_call,derived")
     failed = []
     for name in mods:

@@ -60,33 +60,58 @@ class HydragenArrays(NamedTuple):
     sf_seg: jnp.ndarray      # (U,)
 
 
+def _bucket_rows(n: int) -> int:
+    """Bucketed group count: smallest power of two >= n (0 stays 0).
+
+    Both phase batches are padded to bucketed row counts so the jitted
+    phases (and the fused decode step wrapping them) keep stable shapes
+    across plan rebuilds; padded rows are dead (``qnum 0`` / ``kvlen 0``,
+    segment = trash) and fully masked.  An empty batch stays empty —
+    ``hydragen_partials_arrays`` skips the phase at trace time.
+    """
+    return 0 if n <= 0 else 1 << (n - 1).bit_length()
+
+
 def prepare(plan) -> HydragenArrays:
     """Split a DecodePlan's tasks into prefix/suffix batches (host side)."""
     T = plan.num_tasks
     max_q = plan.max_q
+    trash = plan.num_queries
     qnum = np.asarray(plan.task_qnum[:T])
     seg = np.asarray(plan.seg_ids[:(T + 1) * max_q]).reshape(-1, max_q)[:T]
     shared = np.nonzero(qnum > 1)[0]
     single = np.nonzero(qnum == 1)[0]
+    S, U = _bucket_rows(len(shared)), _bucket_rows(len(single))
 
-    def dev(a):
-        return jnp.asarray(np.ascontiguousarray(a))
+    def dev(a, rows, fill=0):
+        a = np.ascontiguousarray(a)
+        if a.shape[0] < rows:
+            pad = np.full((rows - a.shape[0],) + a.shape[1:], fill, a.dtype)
+            a = np.concatenate([a, pad], 0)
+        return jnp.asarray(a)
 
     return HydragenArrays(
-        px_pages=dev(plan.task_pages[shared]),
-        px_kvlen=dev(plan.task_kvlen[shared]),
-        px_pos=dev(plan.task_pos[shared]),
-        px_qnum=dev(qnum[shared]),
-        px_gather=dev(plan.q_gather[shared]),
-        px_qpos=dev(plan.q_pos[shared]),
-        px_seg=dev(seg[shared].reshape(-1)),
-        sf_pages=dev(plan.task_pages[single]),
-        sf_kvlen=dev(plan.task_kvlen[single]),
-        sf_pos=dev(plan.task_pos[single]),
-        sf_gather=dev(plan.q_gather[single, 0]),
-        sf_qpos=dev(plan.q_pos[single, 0]),
-        sf_seg=dev(seg[single, 0]),
+        px_pages=dev(plan.task_pages[shared], S),
+        px_kvlen=dev(plan.task_kvlen[shared], S),
+        px_pos=dev(plan.task_pos[shared], S),
+        px_qnum=dev(qnum[shared], S),
+        px_gather=dev(plan.q_gather[shared], S),
+        px_qpos=dev(plan.q_pos[shared], S),
+        px_seg=dev(seg[shared].reshape(-1), S * max_q, fill=trash),
+        sf_pages=dev(plan.task_pages[single], U),
+        sf_kvlen=dev(plan.task_kvlen[single], U),
+        sf_pos=dev(plan.task_pos[single], U),
+        sf_gather=dev(plan.q_gather[single, 0], U),
+        sf_qpos=dev(plan.q_pos[single, 0], U),
+        sf_seg=dev(seg[single, 0], U, fill=trash),
     )
+
+
+def advance(ha: HydragenArrays, delta) -> HydragenArrays:
+    """Advance all query positions by ``delta`` decode steps, device-side
+    (dead slots advance too — they are masked by ``px_qnum`` / ``kvlen``)."""
+    d = jnp.asarray(delta, jnp.int32)
+    return ha._replace(px_qpos=ha.px_qpos + d, sf_qpos=ha.sf_qpos + d)
 
 
 def _gather_kv(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:

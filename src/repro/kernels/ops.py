@@ -53,6 +53,17 @@ def plan_arrays(plan) -> PlanArrays:
     return PlanArrays(*(jnp.asarray(getattr(plan, f)) for f in PlanArrays._fields))
 
 
+def advance_plan_arrays(pa: PlanArrays, delta) -> PlanArrays:
+    """Advance all query positions by ``delta`` steps, device-side.
+
+    Between plan rebuilds every live query moves one position per decode
+    step; the fused step passes the epoch-relative step counter instead
+    of re-uploading plan arrays.  Dead q-slots advance too — harmless,
+    they are masked out by ``task_qnum`` in every implementation.
+    """
+    return pa._replace(q_pos=pa.q_pos + jnp.asarray(delta, jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("num_queries",))
 def combine_partials(o_parts: jnp.ndarray, m_parts: jnp.ndarray,
                      l_parts: jnp.ndarray, seg_ids: jnp.ndarray,

@@ -45,6 +45,21 @@ class AttentionBackend:
     ``partials_fn(q, k_pool, v_pool, plan, prepared, window)`` returns
     per-query flash statistics ``(o, m, l)`` — ``o`` normalised within
     the plan-covered KV — a valid partial for further POR merges.
+
+    **Jit-safe contract** (the fused decode step): backends that can run
+    inside a single jitted device program additionally provide
+
+    * ``partials_arrays_fn(q, k_pool, v_pool, prepared, *, num_queries,
+      window)`` — like ``partials`` but consuming only the device arrays
+      from ``prepare`` (no host ``DecodePlan``); ``num_queries`` and
+      ``window`` are trace-time constants, everything else traced;
+    * ``advance_fn(prepared, delta)`` — pure-jnp advance of every query
+      position by ``delta`` decode steps, so the engine can reuse one
+      set of prepared arrays for a whole plan epoch and pass only the
+      epoch-relative step counter.
+
+    ``jit_safe`` is derived from their presence; the engine falls back
+    to the eager per-layer path for backends without them (``ref``).
     """
 
     name: str
@@ -55,6 +70,14 @@ class AttentionBackend:
     supports_window: bool = True
     supports_gqa: bool = True
     description: str = ""
+    partials_arrays_fn: Optional[Callable[..., Tuple]] = None
+    advance_fn: Optional[Callable[[Any, Any], Any]] = None
+
+    @property
+    def jit_safe(self) -> bool:
+        """Whether the backend can run inside the fused decode step."""
+        return (self.partials_arrays_fn is not None
+                and self.advance_fn is not None)
 
     def partials(self, q, k_pool, v_pool, plan, prepared=None, *,
                  window: int = 0):
@@ -120,6 +143,20 @@ def _codec_partials(impl: str):
     return fn
 
 
+def _codec_partials_arrays(impl: str):
+    def fn(q, k_pool, v_pool, pa, *, num_queries, window):
+        return ops.codec_partials_arrays(q, k_pool, v_pool, pa,
+                                         num_queries, window=window,
+                                         impl=impl)
+    return fn
+
+
+def _hydragen_partials_arrays(q, k_pool, v_pool, ha, *, num_queries,
+                              window):
+    return hydragen_mod.hydragen_partials_arrays(q, k_pool, v_pool, ha,
+                                                 num_queries, window=window)
+
+
 def _ref_partials(q, k_pool, v_pool, plan, prepared, window):
     return ref_mod.codec_ref_stats(q, k_pool, v_pool, plan, window=window)
 
@@ -127,18 +164,24 @@ def _ref_partials(q, k_pool, v_pool, plan, prepared, window):
 register(AttentionBackend(
     name="codec-pallas",
     partials_fn=_codec_partials("pallas"),
+    partials_arrays_fn=_codec_partials_arrays("pallas"),
+    advance_fn=ops.advance_plan_arrays,
     description="CoDec PAC Pallas kernel over the lane-scheduled plan "
                 "(interpret mode on CPU, compiled on TPU)"))
 
 register(AttentionBackend(
     name="codec-xla",
     partials_fn=_codec_partials("xla"),
+    partials_arrays_fn=_codec_partials_arrays("xla"),
+    advance_fn=ops.advance_plan_arrays,
     description="CoDec plan semantics as dense vectorised XLA ops "
                 "(what the distributed serve_step lowers)"))
 
 register(AttentionBackend(
     name="flash",
     partials_fn=_codec_partials("xla"),
+    partials_arrays_fn=_codec_partials_arrays("xla"),
+    advance_fn=ops.advance_plan_arrays,
     plan_kind="flash",
     description="FlashDecoding baseline: per-request plan, shared "
                 "prefix KV re-read once per request"))
@@ -147,6 +190,8 @@ register(AttentionBackend(
     name="hydragen",
     partials_fn=hydragen_mod.hydragen_partials,
     prepare=hydragen_mod.prepare,
+    partials_arrays_fn=_hydragen_partials_arrays,
+    advance_fn=hydragen_mod.advance,
     description="Hydragen-style batched shared-prefix decomposition: "
                 "one dense matmul per shared node for all sharing "
                 "queries, per-request suffix attention, LSE merge"))

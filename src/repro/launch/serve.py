@@ -56,6 +56,10 @@ def main() -> int:
                          "for decode growth of the running batch")
     ap.add_argument("--max-running", type=int, default=None,
                     help="cap on concurrently admitted requests")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused single-dispatch decode step with async "
+                         "dispatch (serving/step_fn.py); falls back to "
+                         "the eager path for non-jit-safe backends")
     ap.add_argument("--max-steps", type=int, default=0,
                     help="engine step budget (0 = max-new + slack)")
     ap.add_argument("--seed", type=int, default=0)
@@ -85,7 +89,8 @@ def main() -> int:
                            max_q=max(args.requests, 8), temperature=0.0,
                            prefill_chunk=args.prefill_chunk,
                            reserve_pages=args.reserve_pages,
-                           max_running=args.max_running)
+                           max_running=args.max_running,
+                           fused=args.fused)
         t0 = time.time()
         for p in prompts:
             eng.add_request(p, max_new=args.max_new)
@@ -108,6 +113,13 @@ def main() -> int:
               f"({io_flash / max(io, 1):.1f}x reduction, "
               f"mean sharing degree {eng.forest.mean_sharing_degree():.1f})")
         st = eng.stats
+        if eng.fused:
+            print(f"    fused step: {st['fused_calls']} dispatches, "
+                  f"{eng.fused_cache_size} compiles "
+                  f"({len(eng.bucket_signatures)} shape buckets), "
+                  f"{st['token_flushes']} token syncs, dispatch "
+                  f"{st['decode_dispatch_time']:.3f}s / sync "
+                  f"{st['decode_sync_time']:.3f}s")
         peak = eng.pool.allocator.peak_used
         print(f"    memory pressure: peak {peak}/{eng.pool.num_pages} pages "
               f"({100 * peak / eng.pool.num_pages:.0f}%), "

@@ -292,6 +292,25 @@ def apply_mlp(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     return dense(p["wo"], _act(h, cfg.mlp_act, cfg.d_ff))
 
 
+def apply_ffn_block(p: Params, cfg: ModelConfig, ffn: str, x: jnp.ndarray,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Post-mixer FFN half of a sub-layer: ln2 + (mlp|moe) + residual.
+
+    Shared by the full-sequence, dense-decode, and fused paged-decode
+    paths so all three stay op-identical.  Returns ``(x, moe_aux)``
+    (``aux`` is zero for non-MoE ffn kinds).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "none":
+        return x, aux
+    h2 = apply_norm(p["ln2"], x, cfg)
+    if ffn == "moe":
+        y2, aux = apply_moe(p["ffn"], cfg, h2)
+    else:
+        y2 = apply_mlp(p["ffn"], cfg, h2)
+    return x + y2, aux
+
+
 def moe_init(key, cfg: ModelConfig, dtype) -> Params:
     d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
     gate = 2 if cfg.mlp_act in ("silu", "geglu") else 1

@@ -117,15 +117,8 @@ def _sub_forward(p: Params, cfg: ModelConfig, kind: LayerKind,
         y, (conv_s, ssm_s) = M.mamba_forward(p["mamba"], cfg, h)
         cache["conv"], cache["ssm"] = conv_s, ssm_s
         x = x + y
-    if kind.ffn != "none":
-        h2 = L.apply_norm(p["ln2"], x, cfg)
-        if kind.ffn == "moe":
-            y2, a = L.apply_moe(p["ffn"], cfg, h2)
-            aux = aux + a
-        else:
-            y2 = L.apply_mlp(p["ffn"], cfg, h2)
-        x = x + y2
-    return x, aux, cache
+    x, a = L.apply_ffn_block(p, cfg, kind.ffn, x)
+    return x, aux + a, cache
 
 
 def _encode(params: Params, cfg: ModelConfig,
@@ -162,6 +155,63 @@ def _unembed(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
     x = L.apply_norm(params["final_norm"], x, cfg)
     w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     return (x @ w).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# stacked-apply entry point (fused paged decode)
+# --------------------------------------------------------------------- #
+def mixer_offsets(cfg: ModelConfig) -> Tuple[List[int], List[int], int, int]:
+    """Per-pattern-position attention/mamba ordinals within one period.
+
+    Returns ``(attn_off, mamba_off, attn_per_period, mamba_per_period)``;
+    the dense ordinal of pattern position ``i`` in period ``pi`` is
+    ``pi * attn_per_period + attn_off[i]`` — the same period-major order
+    ``serving.engine.flat_layers`` flattens to, i.e. the layer axis of
+    the paged KV pool and of batched SSM state stacks.
+    """
+    attn_off, mamba_off = [], []
+    na = nm = 0
+    for kind in cfg.layer_pattern:
+        attn_off.append(na)
+        mamba_off.append(nm)
+        if kind.mixer in ("attn", "attn_local"):
+            na += 1
+        elif kind.mixer == "mamba":
+            nm += 1
+    return attn_off, mamba_off, na, nm
+
+
+def scan_layer_stack(cfg: ModelConfig, params: Params, body, carry):
+    """Apply ``body`` to every sub-layer, scanning the period-stacked
+    parameter pytree (``params["blocks"]``) and unrolling the remainder.
+
+    ``body(carry, kind, p, attn_idx, mamba_idx) -> carry`` receives the
+    sub-layer's parameters and its dense attention / mamba ordinals
+    (traced scalars inside the scan, python ints for remainder layers) —
+    what paged KV pools and batched recurrent-state stacks are indexed
+    by.  Keeping the lowered HLO O(period) is what makes the fused
+    decode step compile fast for deep models; ordering matches
+    ``serving.engine.flat_layers`` exactly.
+    """
+    attn_off, mamba_off, A, M = mixer_offsets(cfg)
+    pat = cfg.layer_pattern
+
+    def period_body(c, xs):
+        pp, pi = xs
+        for i, kind in enumerate(pat):
+            c = body(c, kind, pp[f"sub{i}"],
+                     pi * A + attn_off[i], pi * M + mamba_off[i])
+        return c, None
+
+    if cfg.num_periods > 0:
+        carry, _ = jax.lax.scan(
+            period_body, carry,
+            (params["blocks"], jnp.arange(cfg.num_periods)))
+    for i in range(cfg.remainder_layers):
+        carry = body(carry, pat[i], params["rem"][i],
+                     cfg.num_periods * A + attn_off[i],
+                     cfg.num_periods * M + mamba_off[i])
+    return carry
 
 
 # --------------------------------------------------------------------- #
@@ -371,13 +421,7 @@ def _sub_decode(p: Params, cfg: ModelConfig, kind: LayerKind,
                                             cache["conv"], cache["ssm"])
         new_cache["conv"], new_cache["ssm"] = conv_s, ssm_s
         x = x + y
-    if kind.ffn != "none":
-        h2 = L.apply_norm(p["ln2"], x, cfg)
-        if kind.ffn == "moe":
-            y2, _ = L.apply_moe(p["ffn"], cfg, h2)
-        else:
-            y2 = L.apply_mlp(p["ffn"], cfg, h2)
-        x = x + y2
+    x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
     return x, new_cache
 
 

@@ -30,7 +30,15 @@ memory pressure instead of raising ``MemoryError``:
   prefix-shared, ``flash`` per-request baseline, ``ref`` oracle); the
   backend's ``prepare(plan)`` output is cached across steps and its
   ``partials`` are POR-merged with the tail-page attention — see
-  DESIGN.md §2–§3 for the contract.
+  DESIGN.md §2–§3 for the contract;
+* with ``fused=True`` the whole decode step — scanned layer stack, KV
+  tail writes, backend partials, POR merge, FFN, unembed, sampling —
+  runs as ONE jitted, donated, shape-bucketed device dispatch per token
+  (``serving/step_fn.py``), with asynchronous dispatch: the host defers
+  sampled tokens as placeholders and syncs only at plan-rebuild /
+  admission / eviction / completion boundaries
+  (``flush_tokens``, DESIGN.md §8); backends that cannot trace
+  (``ref``) transparently fall back to the eager per-layer path.
 
 Under greedy decoding the token streams are independent of memory
 pressure: a preempted-and-recomputed request produces exactly the same
@@ -57,11 +65,32 @@ from ..kernels import ops, ref as ref_mod, registry as registry_mod
 from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
-from . import sampler
+from . import sampler, step_fn as step_fn_mod
 from .kv_cache import PagedKVPool
 
 # request lifecycle states
 WAITING, PREFILL, RUNNING, DONE = "waiting", "prefill", "running", "done"
+
+# a sampled token that still lives in an un-synced device array
+# (fused async dispatch); materialised by ``DecodeEngine.flush_tokens``
+PENDING_DEVICE = "<device>"
+_PLACEHOLDER = -1
+
+
+class _Deferred:
+    """One fused dispatch's sampled tokens, not yet on the host.
+
+    ``patches`` records where each token was appended as a placeholder
+    (request ``generated`` index + forest leaf token slot) so a later
+    flush can write the real values in place.
+    """
+
+    __slots__ = ("tokens", "rows", "patches")
+
+    def __init__(self, tokens, rows):
+        self.tokens = tokens          # (B_bucket,) device int32
+        self.rows = rows              # request id per row
+        self.patches = []             # (rid, row, gen_idx, node_id, tok_idx)
 
 
 @dataclasses.dataclass
@@ -108,7 +137,8 @@ class DecodeEngine:
                  replan_interval: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk=None, reserve_pages: int = 0,
-                 max_running: Optional[int] = None):
+                 max_running: Optional[int] = None,
+                 fused: bool = False):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -158,11 +188,41 @@ class DecodeEngine:
         self.replan_interval = replan_interval
         self._steps_since_plan = 0
         self.stats = {"steps": 0, "replans": 0, "plan_time": 0.0,
-                      "decode_time": 0.0, "prefill_tokens": 0,
+                      "decode_time": 0.0, "decode_dispatch_time": 0.0,
+                      "decode_sync_time": 0.0, "prefill_tokens": 0,
                       "admitted": 0, "preempted": 0, "reclaimed": 0,
                       "recompute_tokens": 0, "prefill_chunks": 0,
-                      "prefill_stalls": 0}
+                      "prefill_stalls": 0, "fused_calls": 0,
+                      "token_flushes": 0}
         self.step_stats: List[Dict] = []
+        self._decode_timing: Dict[str, float] = {}
+
+        # ---- fused single-dispatch decode (serving/step_fn.py) -------- #
+        # requested via ``fused=True``; active only for backends that
+        # satisfy the registry's jit-safe partials contract (``ref``
+        # falls back to the eager per-layer path).
+        self.fused = bool(fused) and self._backend.jit_safe
+        self._mamba_layer_js = [j for j, (k, _) in enumerate(self.layers)
+                                if k.mixer == "mamba"]
+        self._step_fn = None
+        if self.fused:
+            self._step_fn = step_fn_mod.make_step_fn(
+                cfg, self._backend, tuple(self._windows()), temperature)
+        # epoch state: valid between plan rebuilds
+        self._fused_rows: Optional[List[int]] = None
+        self._fused_base: Optional[step_fn_mod.StepBase] = None
+        self._fused_prepared: Optional[tuple] = None
+        self._fused_bucket = 0
+        self._fused_delta = 0
+        self._mamba_carry = None          # (conv_all, ssm_all) device stacks
+        # async token plumbing
+        self._deferred: List[_Deferred] = []
+        self._pending_ref: Dict[int, Tuple[_Deferred, int]] = {}
+        self._flushed_since_dispatch = True
+        self._last_out: Optional[Tuple[List[int], Any]] = None
+        # distinct fused shape signatures seen (compile-cache regression
+        # tests bound the jit cache size by this set's size)
+        self.bucket_signatures: set = set()
 
     # ------------------------------------------------------------------ #
     # request admission (admit phase) + chunked prefill (prefill phase)
@@ -238,6 +298,13 @@ class DecodeEngine:
             while not self._has_pages_for(head):
                 if not self._reclaim_one(set(), allow_preempt=False):
                     return                  # no free memory: keep waiting
+            # admission boundary: radix INSERTION compares token values,
+            # so in-flight device tokens must land before _admit.  The
+            # space probe above tolerates placeholders (-1 never equals
+            # a real token, so match_len only under-matches and the page
+            # need is over-estimated) — a head-of-line request blocked
+            # on memory does NOT cost the fused path a sync per step.
+            self.flush_tokens()
             self.admission.pop()
             self._admit(head)
             spent += self._prefill_step(
@@ -258,6 +325,45 @@ class DecodeEngine:
         req.state = PREFILL
         self._prefilling.append(req.rid)
         self.stats["admitted"] += 1
+
+    # ------------------------------------------------------------------ #
+    # async-token sync (fused path)
+    # ------------------------------------------------------------------ #
+    def flush_tokens(self) -> None:
+        """Materialise every deferred device token on the host.
+
+        The fused decode path appends sampled tokens to the forest and to
+        ``Request.generated`` as placeholders while the device arrays are
+        still in flight; this is the single blocking host⇄device sync
+        point, invoked only at plan-rebuild / admission / eviction /
+        completion boundaries (a no-op otherwise — the eager path never
+        defers).
+        """
+        if not self._deferred and not self._pending_ref:
+            return
+        t0 = time.perf_counter()
+        vals = {id(e): np.asarray(e.tokens) for e in self._deferred}
+        for e in self._deferred:
+            v = vals[id(e)]
+            for rid, row, gen_idx, node_id, tok_idx in e.patches:
+                tok = int(v[row])
+                req = self.requests.get(rid)
+                if req is not None and gen_idx < len(req.generated):
+                    req.generated[gen_idx] = tok
+                node = self.forest.nodes.get(node_id)
+                if (node is not None and node.tokens is not None
+                        and tok_idx < len(node.tokens)):
+                    node.tokens[tok_idx] = tok
+        # sampled-but-not-yet-appended tokens become host ``pending``s
+        for rid, (e, row) in self._pending_ref.items():
+            req = self.requests.get(rid)
+            if req is not None and req.pending is PENDING_DEVICE:
+                req.pending = int(vals[id(e)][row])
+        self._deferred = []
+        self._pending_ref = {}
+        self._flushed_since_dispatch = True
+        self.stats["token_flushes"] += 1
+        self.stats["decode_sync_time"] += time.perf_counter() - t0
 
     # ------------------------------------------------------------------ #
     # eviction (evict phase) / reclamation
@@ -292,6 +398,8 @@ class DecodeEngine:
         """Evict a live request: release its non-shared pages, pin the
         shared prefix nodes it leaves behind, and requeue it (front) to be
         re-prefilled from the radix-cached prefix."""
+        # re-prefill recomputes from token values; sync any deferred ones
+        self.flush_tokens()
         req = self.requests[rid]
         assert req.state in (PREFILL, RUNNING), req.state
         if len(req.generated) >= req.max_new:
@@ -572,13 +680,7 @@ class DecodeEngine:
                 y = jnp.concatenate(ys, 1)
                 self.mamba_state.setdefault(j, {})[rid] = state
                 x = x + y
-            if kind.ffn != "none":
-                h2 = L.apply_norm(p["ln2"], x, cfg)
-                if kind.ffn == "moe":
-                    y2, _ = L.apply_moe(p["ffn"], cfg, h2)
-                else:
-                    y2 = L.apply_mlp(p["ffn"], cfg, h2)
-                x = x + y2
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
 
         # write new KV into unfilled page slots only
         offs, pages, kv_rows = [], [], []
@@ -665,6 +767,17 @@ class DecodeEngine:
         """Rebuild counter (the plan-lifecycle tests consume this)."""
         return self.stats["replans"]
 
+    @property
+    def fused_cache_size(self) -> int:
+        """Compiled fused-step program count (jit cache entries); the
+        compile-cache regression test bounds this by the number of
+        distinct ``bucket_signatures``."""
+        # _cache_size is a private jax API (stable across the pinned
+        # 0.4.x line); degrade to 0 rather than crash stats printing if
+        # a future jax renames it
+        size = getattr(self._step_fn, "_cache_size", None)
+        return int(size()) if callable(size) else 0
+
     def _rebuild_plans(self) -> None:
         t0 = time.perf_counter()
         rows = self._active_rows()
@@ -710,10 +823,12 @@ class DecodeEngine:
                 for k in ("admitted", "preempted", "reclaimed",
                           "prefill_tokens", "recompute_tokens")}
         self._admit_phase()
+        self._decode_timing = {}
         out = self._decode_phase()
         self.step_stats.append({
             "step": len(self.step_stats),
             "decoded": len(out),
+            **self._decode_timing,
             "admitted": self.stats["admitted"] - snap["admitted"],
             "preempted": self.stats["preempted"] - snap["preempted"],
             "reclaimed": self.stats["reclaimed"] - snap["reclaimed"],
@@ -729,21 +844,32 @@ class DecodeEngine:
         })
         return out
 
-    def _decode_phase(self) -> Dict[int, int]:
-        cfg = self.cfg
-        rows0 = self._active_rows()
-        if not rows0:
-            return {}
-        t0 = time.perf_counter()
-        # 1. append pending tokens to leaves; grow tail pages, preempting
-        #    the fewest-generated victim when the pool runs dry
+    def _decode_phase(self) -> Dict[int, Optional[int]]:
+        if self.fused:
+            return self._decode_phase_fused()
+        return self._decode_phase_eager()
+
+    def _append_pending(self, rows0: List[int]) -> None:
+        """Append each running request's pending token to its leaf and
+        grow tail pages, preempting the fewest-generated victim when the
+        pool runs dry.  Device pendings (fused async path) are appended
+        as placeholders and patched at the next ``flush_tokens``."""
         for r in rows0:
             req = self.requests[r]
             if req.state != RUNNING:   # evicted growing an earlier row
                 continue
-            tok = req.pending
-            self.forest.append_token(r, tok)
-            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            if req.pending is PENDING_DEVICE:
+                ent, row = self._pending_ref.pop(r)
+                self.forest.append_token(r, _PLACEHOLDER)
+                leaf = self.forest.nodes[self.forest.leaf_of[r]]
+                ent.patches.append((r, row, len(req.generated), leaf.id,
+                                    len(leaf.tokens) - 1))
+                req.generated.append(_PLACEHOLDER)
+            else:
+                self.forest.append_token(r, req.pending)
+                leaf = self.forest.nodes[self.forest.leaf_of[r]]
+                req.generated.append(req.pending)
+            req.pending = None
             if -(-leaf.length // self.page_size) > len(leaf.page_ids):
                 got = self._alloc_pages(1, exclude={r})
                 if got is None:
@@ -751,8 +877,15 @@ class DecodeEngine:
                         f"KV pool exhausted growing request {r}: nothing "
                         f"left to evict (pool smaller than the working set)")
                 leaf.page_ids += got
-            req.generated.append(tok)
-            req.pending = None
+
+    def _decode_phase_eager(self) -> Dict[int, int]:
+        cfg = self.cfg
+        rows0 = self._active_rows()
+        if not rows0:
+            return {}
+        t0 = time.perf_counter()
+        # 1. append pending tokens to leaves (may evict under pressure)
+        self._append_pending(rows0)
         rows = self._active_rows()
         if not rows:
             return {}
@@ -776,7 +909,8 @@ class DecodeEngine:
         x = T._embed(self.params, cfg, jnp.asarray(tokens)[None].T,
                      q_pos[:, None])                       # (B,1,d)
 
-        # tail page info
+        # tail page info, converted host->device ONCE per step (not once
+        # per attention layer)
         tail_pages, tail_base, tail_off = [], [], []
         for i, r in enumerate(rows):
             leaf = self.forest.nodes[self.forest.leaf_of[r]]
@@ -784,9 +918,9 @@ class DecodeEngine:
             tail_pages.append(leaf.page_ids[tp])
             tail_base.append(leaf.start_pos + tp * self.page_size)
             tail_off.append((leaf.length - 1) % self.page_size)
-        tail_pages = np.asarray(tail_pages)
-        tail_base = jnp.asarray(np.asarray(tail_base))
-        tail_off = np.asarray(tail_off)
+        tail_pages = jnp.asarray(np.asarray(tail_pages), jnp.int32)
+        tail_base = jnp.asarray(np.asarray(tail_base), jnp.int32)
+        tail_off = jnp.asarray(np.asarray(tail_off), jnp.int32)
 
         for j, (kind, p) in enumerate(self.layers):
             h = L.apply_norm(p["ln"], x, cfg)
@@ -814,17 +948,15 @@ class DecodeEngine:
                 for i, r in enumerate(rows):
                     states[r] = (conv_n[i:i + 1], ssm_n[i:i + 1])
                 x = x + y
-            if kind.ffn != "none":
-                h2 = L.apply_norm(p["ln2"], x, cfg)
-                if kind.ffn == "moe":
-                    y2, _ = L.apply_moe(p["ffn"], cfg, h2)
-                else:
-                    y2 = L.apply_mlp(p["ffn"], cfg, h2)
-                x = x + y2
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
 
         logits = T._unembed(self.params, cfg, x)[:, 0]      # (B, V)
         self.key, sk = jax.random.split(self.key)
-        toks = np.asarray(sampler.sample(logits, sk, self.temperature))
+        toks_dev = sampler.sample(logits, sk, self.temperature)
+        t1 = time.perf_counter()
+        # dispatch is done; the timer must cover the actual compute too
+        toks = np.asarray(jax.block_until_ready(toks_dev))
+        t2 = time.perf_counter()
         out = {}
         for i, r in enumerate(rows):
             req = self.requests[r]
@@ -834,6 +966,9 @@ class DecodeEngine:
             if len(req.generated) >= req.max_new:
                 req.state = DONE
         self.stats["steps"] += 1
+        self._decode_timing = {"dispatch_time": t1 - t0,
+                               "compute_time": t2 - t1}
+        self.stats["decode_dispatch_time"] += t1 - t0
         self.stats["decode_time"] += time.perf_counter() - t0
         return out
 
@@ -844,12 +979,180 @@ class DecodeEngine:
         o_f, m_f, l_f = self._backend.partials(
             qb, k_pool, v_pool, plan, prepared, window=window)
         # tail part: each request's growing last page
-        kt = k_pool[jnp.asarray(tail_pages)]
-        vt = v_pool[jnp.asarray(tail_pages)]
+        kt = k_pool[tail_pages]
+        vt = v_pool[tail_pages]
         o_t, m_t, l_t = ops.single_page_attention(
             qb, kt, vt, tail_base, q_pos, window=window)
         o, _, _ = ref_mod.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
         return o.astype(qb.dtype)
+
+    # ------------------------------------------------------------------ #
+    # fused decode phase: one jitted, donated, bucketed dispatch per
+    # token; host syncs only at plan-rebuild/admission/eviction/
+    # completion boundaries (serving/step_fn.py, DESIGN.md §8)
+    # ------------------------------------------------------------------ #
+    def _decode_phase_fused(self) -> Dict[int, Optional[int]]:
+        rows0 = self._active_rows()
+        if not rows0:
+            return {}
+        t0 = time.perf_counter()
+        # 1. append pending tokens (host ints after a sync / prefill,
+        #    otherwise the in-flight device array via placeholders)
+        self._append_pending(rows0)
+        rows = self._active_rows()
+        if not rows:
+            return {}
+
+        # 2. plan lifecycle: a rebuild is the sync point — deferred
+        #    tokens land, batched SSM state scatters back, plans/base
+        #    arrays are rebuilt bucketed
+        if (self.replan_interval is not None
+                and self._steps_since_plan >= self.replan_interval):
+            self._plan_dirty = True
+        if (self._plan_dirty or self._fused_rows != rows
+                or plan_mod.plan_key(self.forest, rows) != self._plan_key):
+            self._fused_epoch(rows)
+        else:
+            self._fused_delta += 1
+        self._steps_since_plan += 1
+
+        # 3. input tokens: in steady state the previous dispatch's device
+        #    array (no host round-trip); after any sync, host values
+        if (not self._flushed_since_dispatch and self._last_out is not None
+                and self._last_out[0] == rows):
+            tok_in = self._last_out[1]
+        else:
+            tok = np.zeros(self._fused_bucket, np.int32)
+            tok[:len(rows)] = [self.requests[r].generated[-1] for r in rows]
+            tok_in = jnp.asarray(tok)
+
+        # 4. single dispatch: layers + KV writes + attention + merge +
+        #    FFN + unembed + sampling, pool/SSM state donated
+        conv_all, ssm_all = self._mamba_carry
+        state = step_fn_mod.StepState(self.pool.k, self.pool.v,
+                                      conv_all, ssm_all)
+        t_d0 = time.perf_counter()
+        toks_dev, self.key, state = self._step_fn(
+            self.params, state, tok_in, self.key, self._fused_base,
+            np.int32(self._fused_delta), self._fused_prepared)
+        dispatch = time.perf_counter() - t_d0
+        self.pool.k, self.pool.v = state.pool_k, state.pool_v
+        self._mamba_carry = (state.conv, state.ssm)
+        ent = _Deferred(toks_dev, list(rows))
+        self._deferred.append(ent)
+        self._last_out = (list(rows), toks_dev)
+        self._flushed_since_dispatch = False
+        out: Dict[int, Optional[int]] = {}
+        done_any = False
+        for i, r in enumerate(rows):
+            req = self.requests[r]
+            req.pending = PENDING_DEVICE
+            self._pending_ref[r] = (ent, i)
+            req.computed_hwm = max(req.computed_hwm,
+                                   self.forest.context_len(r))
+            out[r] = None
+            if len(req.generated) >= req.max_new:
+                req.state = DONE
+                done_any = True
+        self.stats["steps"] += 1
+        self.stats["fused_calls"] += 1
+        self.stats["decode_dispatch_time"] += dispatch
+        self._decode_timing = {"dispatch_time": dispatch}
+        if done_any:
+            # completion boundary: finished streams must be readable
+            self.flush_tokens()
+            for r in rows:
+                if self.requests[r].done:
+                    out[r] = self.requests[r].generated[-1]
+        self.stats["decode_time"] += time.perf_counter() - t0
+        return out
+
+    def _fused_epoch(self, rows: List[int]) -> None:
+        """Start a new plan epoch (the fused path's only sync point)."""
+        self.flush_tokens()
+        self._sync_mamba_state()
+        t0 = time.perf_counter()
+        B = len(rows)
+        bucket = plan_mod.bucket_pow2(B)
+        req_rows = {r: i for i, r in enumerate(rows)}
+        ps = self.page_size
+        truncate = {}
+        for r in rows:
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            truncate[leaf.id] = max(0, ((leaf.length - 1) // ps) * ps)
+        build = (plan_mod.flash_plan if self._backend.plan_kind == "flash"
+                 else plan_mod.build_plan)
+        prepared = []
+        sig: List = [bucket]
+        for w in self._windows():
+            p = build(self.forest, self.cost_model, self.num_lanes,
+                      self.max_q, self.max_kv_per_task, req_rows=req_rows,
+                      window=w, truncate=truncate)
+            p = plan_mod.bucket_plan(p, bucket)
+            pr = self._backend.prepare(p)
+            prepared.append(pr)
+            sig.append((w,) + tuple(tuple(a.shape)
+                                    for a in jax.tree.leaves(pr)))
+        self._fused_prepared = tuple(prepared)
+        self.bucket_signatures.add(tuple(sig))
+
+        valid = np.zeros(bucket, bool)
+        valid[:B] = True
+        q_pos0 = np.full(bucket, -1, np.int32)
+        tail_page = np.full(bucket, self.pool.trash_page, np.int32)
+        tail_base = np.zeros(bucket, np.int32)
+        tail_off0 = np.zeros(bucket, np.int32)
+        for i, r in enumerate(rows):
+            q_pos0[i] = self.forest.context_len(r) - 1
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            tp = (leaf.length - 1) // ps
+            tail_page[i] = leaf.page_ids[tp]
+            tail_base[i] = leaf.start_pos + tp * ps
+            tail_off0[i] = (leaf.length - 1) % ps
+        self._fused_base = step_fn_mod.StepBase(
+            jnp.asarray(valid), jnp.asarray(q_pos0), jnp.asarray(tail_page),
+            jnp.asarray(tail_base), jnp.asarray(tail_off0))
+        self._fused_rows = list(rows)
+        self._fused_bucket = bucket
+        self._fused_delta = 0
+        self._gather_mamba_state(rows, bucket)
+        self._plan_key = plan_mod.plan_key(self.forest, rows)
+        self._plan_dirty = False
+        self._steps_since_plan = 0
+        self.stats["replans"] += 1
+        self.stats["plan_time"] += time.perf_counter() - t0
+
+    def _sync_mamba_state(self) -> None:
+        """Scatter the batched device SSM state back into the per-request
+        store (device slices — no host transfer)."""
+        if self._mamba_carry is None or self._fused_rows is None:
+            return
+        conv_all, ssm_all = self._mamba_carry
+        for li, j in enumerate(self._mamba_layer_js):
+            st = self.mamba_state.setdefault(j, {})
+            for i, r in enumerate(self._fused_rows):
+                req = self.requests.get(r)
+                if req is not None and req.state == RUNNING:
+                    st[r] = (conv_all[li, i:i + 1], ssm_all[li, i:i + 1])
+
+    def _gather_mamba_state(self, rows: List[int], bucket: int) -> None:
+        """Stack per-request SSM state into per-layer batched device
+        arrays for the new epoch (padded rows stay zero)."""
+        js = self._mamba_layer_js
+        cfg = self.cfg
+        K, conv_dim = cfg.ssm_conv, cfg.d_inner + 2 * cfg.ssm_state
+        conv = jnp.zeros((len(js), bucket, max(K - 1, 0), conv_dim),
+                         jnp.float32)
+        ssm = jnp.zeros((len(js), bucket, max(cfg.ssm_heads, 1),
+                         max(cfg.ssm_head_dim, 1), max(cfg.ssm_state, 1)),
+                        jnp.float32)
+        for li, j in enumerate(js):
+            st = self.mamba_state.get(j, {})
+            conv = conv.at[li, :len(rows)].set(
+                jnp.concatenate([st[r][0] for r in rows], 0))
+            ssm = ssm.at[li, :len(rows)].set(
+                jnp.concatenate([st[r][1] for r in rows], 0))
+        self._mamba_carry = (conv, ssm)
 
     # ------------------------------------------------------------------ #
     def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
@@ -857,9 +1160,11 @@ class DecodeEngine:
             if not self.has_work():
                 break
             self.step()
+        self.flush_tokens()
         return {r: req.generated for r, req in self.requests.items()}
 
     def release(self, rid: int) -> None:
+        self.flush_tokens()
         req = self.requests.pop(rid)
         if req.state == WAITING:
             self.admission.remove(rid)

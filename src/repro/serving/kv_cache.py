@@ -86,10 +86,18 @@ class PagedKVPool:
         self.n_layers = n_layers
         self.num_pages = num_pages
         self.page_size = page_size
-        self.k = jnp.zeros((n_layers, num_pages, page_size, n_kv, head_dim),
-                           dtype)
+        # one extra physical page past the allocator's range: a write
+        # sink for padded batch rows of the fused decode step (their
+        # scattered tail KV must land somewhere that no plan ever reads)
+        self.k = jnp.zeros((n_layers, num_pages + 1, page_size, n_kv,
+                            head_dim), dtype)
         self.v = jnp.zeros_like(self.k)
         self.allocator = PageAllocator(num_pages)
+
+    @property
+    def trash_page(self) -> int:
+        """Physical page id of the write sink (never allocated)."""
+        return self.num_pages
 
     @property
     def num_free(self) -> int:

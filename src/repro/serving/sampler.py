@@ -8,7 +8,13 @@ import jax.numpy as jnp
 
 def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
            top_k: int = 0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32 token ids."""
+    """logits: (B, V) -> (B,) int32 token ids.
+
+    Each row draws from its own ``fold_in(key, row)`` stream, so row
+    ``i``'s sample is independent of the batch row count — the fused
+    decode path pads the batch to a bucket size, and padded rows must
+    not perturb real rows' draws.
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     logits = logits / temperature
@@ -16,4 +22,8 @@ def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1][:, None]
         logits = jnp.where(logits < cutoff, -1e30, logits)
-    return jax.random.categorical(key, logits, -1).astype(jnp.int32)
+    rows = jnp.arange(logits.shape[0])
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(rows)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l))(keys, logits
+                                                   ).astype(jnp.int32)

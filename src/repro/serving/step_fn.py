@@ -1,0 +1,155 @@
+"""Fused device-side decode step: one jitted dispatch per token.
+
+The eager engine loop (``DecodeEngine._decode_phase_eager``) drives each
+decode token through dozens of small jitted ops — per-layer host→device
+conversions, per-layer KV-pool scatters, a python loop over layers —
+so wall-clock TPOT is dominated by dispatch overhead and the PAC
+kernel's memory-access savings never reach end-to-end numbers.  This
+module collapses the whole step into **one** jitted, donated,
+shape-bucketed device function:
+
+* the layer stack is applied through ``transformer.scan_layer_stack``
+  (``lax.scan`` over the period-stacked parameter pytree, remainder
+  unrolled) so the lowered HLO stays O(period);
+* tail-page metadata is pre-batched into :class:`StepBase` device
+  arrays once per **plan epoch** (the interval between plan rebuilds);
+  within an epoch the only per-step inputs are the previous step's
+  token array, the PRNG key, and the epoch-relative step counter
+  ``delta`` (query positions and tail slots advance as
+  ``base + delta`` on device);
+* KV tail writes, the backend's frozen-plan ``partials``
+  (``AttentionBackend.partials_arrays_fn`` — the jit-safe contract),
+  the tail-page attention, the POR merge, FFN/MoE/Mamba mixing,
+  unembedding, and sampling all trace into the same program;
+* the KV pool and batched Mamba state are **donated**
+  (:class:`StepState`), so XLA updates them in place;
+* every shape is bucketed (batch rows and plan arrays to powers of two
+  — ``core.plan.bucket_plan``) so arrivals/completions/evictions reuse
+  the compiled program; padded rows carry ``q_pos = -1`` and write
+  their tail KV to the pool's trash page.
+
+The engine dispatches step *t+1* while the host still holds step *t*'s
+token array as an opaque future — host⇄device syncs happen only at
+plan-rebuild and admission boundaries (see ``DecodeEngine.flush_tokens``).
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops, ref as ref_mod
+from ..models import layers as L
+from ..models import mamba as M
+from ..models import transformer as T
+from . import sampler
+
+_DONATION_WARNING_SILENCED = False
+
+
+def _silence_donation_warning() -> None:
+    """CPU XLA often cannot honour buffer donation; the fallback copy is
+    correct, just slower — don't warn about it on every fused dispatch.
+    Installed once, and only when a fused step is actually built, so
+    processes that never use the fused path keep the warning."""
+    global _DONATION_WARNING_SILENCED
+    if not _DONATION_WARNING_SILENCED:
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        _DONATION_WARNING_SILENCED = True
+
+
+class StepBase(NamedTuple):
+    """Per-epoch device inputs: constant between plan rebuilds."""
+
+    row_valid: jnp.ndarray   # (B,) bool — padded bucket rows are False
+    q_pos0: jnp.ndarray      # (B,) int32 query position at delta=0 (-1 pads)
+    tail_page: jnp.ndarray   # (B,) int32 tail KV page (pads → pool trash)
+    tail_base: jnp.ndarray   # (B,) int32 abs position of the page's slot 0
+    tail_off0: jnp.ndarray   # (B,) int32 in-page slot written at delta=0
+
+
+class StepState(NamedTuple):
+    """Donated device state threaded through consecutive fused steps."""
+
+    pool_k: jnp.ndarray      # (n_attn, P+1, page, n_kv, hd) paged KV pool
+    pool_v: jnp.ndarray
+    conv: jnp.ndarray        # (n_mamba, B, K-1, conv_dim) f32 SSM conv state
+    ssm: jnp.ndarray         # (n_mamba, B, H, P_h, S) f32 SSM recurrent state
+
+
+def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
+                 temperature: float):
+    """Build the fused decode step for one engine configuration.
+
+    Returns a jitted callable
+
+        ``fn(params, state, tokens, key, base, delta, prepared)
+        -> (tokens', key', state')``
+
+    where ``state`` (:class:`StepState`) is donated, ``tokens`` is the
+    (bucketed) batch of tokens appended this step, ``delta`` the
+    epoch-relative step counter (traced — no recompile per step), and
+    ``prepared`` a tuple of the backend's prepared plan arrays, one per
+    attention window in ``windows``.  ``backend`` must satisfy the
+    registry's jit-safe contract (``partials_arrays_fn``/``advance_fn``).
+    """
+    _silence_donation_warning()
+    win_slot = {w: i for i, w in enumerate(windows)}
+
+    def step(params, state: StepState, tokens: jnp.ndarray, key,
+             base: StepBase, delta, prepared: Tuple[Any, ...]):
+        B = tokens.shape[0]
+        dlt = jnp.asarray(delta, jnp.int32) * base.row_valid.astype(jnp.int32)
+        q_pos = base.q_pos0 + dlt
+        tail_off = base.tail_off0 + dlt
+        advanced = tuple(backend.advance_fn(p, delta) for p in prepared)
+        x = T._embed(params, cfg, tokens[:, None], q_pos[:, None])  # (B,1,d)
+
+        def body(c, kind, p, la, lm):
+            x, pool_k, pool_v, conv_all, ssm_all = c
+            h = L.apply_norm(p["ln"], x, cfg)
+            if kind.mixer in ("attn", "attn_local"):
+                w = cfg.sliding_window if kind.mixer == "attn_local" else 0
+                q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
+                                                 q_pos[:, None])
+                pool_k = pool_k.at[la, base.tail_page, tail_off].set(
+                    k_new[:, 0].astype(pool_k.dtype))
+                pool_v = pool_v.at[la, base.tail_page, tail_off].set(
+                    v_new[:, 0].astype(pool_v.dtype))
+                k_pool, v_pool = pool_k[la], pool_v[la]
+                qb = q[:, 0]                                # (B, h, hd)
+                o_f, m_f, l_f = backend.partials_arrays_fn(
+                    qb, k_pool, v_pool, advanced[win_slot[w]],
+                    num_queries=B, window=w)
+                kt = k_pool[base.tail_page]
+                vt = v_pool[base.tail_page]
+                o_t, m_t, l_t = ops.single_page_attention(
+                    qb, kt, vt, base.tail_base, q_pos, window=w)
+                o, _, _ = ref_mod.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
+                y = L.dense(p["attn"]["wo"],
+                            o.astype(qb.dtype).reshape(
+                                B, 1, cfg.num_heads * cfg.head_dim))
+                x = x + y
+            elif kind.mixer == "mamba":
+                y, (conv_n, ssm_n) = M.mamba_decode(
+                    p["mamba"], cfg, h, conv_all[lm], ssm_all[lm])
+                conv_all = conv_all.at[lm].set(conv_n)
+                ssm_all = ssm_all.at[lm].set(ssm_n)
+                x = x + y
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
+            return (x, pool_k, pool_v, conv_all, ssm_all)
+
+        x, pool_k, pool_v, conv_all, ssm_all = T.scan_layer_stack(
+            cfg, params, body,
+            (x, state.pool_k, state.pool_v, state.conv, state.ssm))
+        logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
+        key, sk = jax.random.split(key)
+        toks = sampler.sample(logits, sk, temperature)
+        return toks, key, StepState(pool_k, pool_v, conv_all, ssm_all)
+
+    return jax.jit(step, donate_argnums=(1,))

@@ -54,12 +54,12 @@ def make_workload(seed):
 
 
 def run_workload(backend, workload, *, num_pages=512, prefill_chunk=None,
-                 reserve_pages=0, max_steps=64):
+                 reserve_pages=0, max_steps=64, fused=False):
     """Run a workload end-to-end; returns ({idx: generated}, stats)."""
     eng = DecodeEngine(CFG, PARAMS, page_size=PAGE, num_pages=num_pages,
                        backend=backend, max_q=8, temperature=0.0,
                        prefill_chunk=prefill_chunk,
-                       reserve_pages=reserve_pages)
+                       reserve_pages=reserve_pages, fused=fused)
     arrivals = {}
     for i, (_, _, arr) in enumerate(workload):
         arrivals.setdefault(arr, []).append(i)
@@ -125,6 +125,29 @@ def test_differential_under_pressure(backend):
     assert stats["preempted"] >= 1, stats
     assert stats["prefill_chunks"] >= 1, stats
     assert stats["recompute_tokens"] >= 1, stats
+
+
+# --------------------------------------------------------------------- #
+# fused single-dispatch decode: every backend, including pressure runs
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", registry.names())
+def test_differential_fused_vs_ref(backend):
+    """The fused (single-dispatch, async) decode path must reproduce the
+    eager ``ref`` oracle byte-for-byte."""
+    wl = make_workload(0)
+    got, _ = run_workload(backend, wl, fused=True)
+    assert got == oracle(("seed", 0), wl), backend
+
+
+@pytest.mark.parametrize("backend", registry.names())
+def test_differential_fused_under_pressure(backend):
+    """Fused path through eviction + chunked prefill: streams identical
+    to the unconstrained eager oracle."""
+    got, stats = run_workload(backend, FIXED_WORKLOAD, fused=True,
+                              **PRESSURE)
+    assert got == oracle(("fixed",), FIXED_WORKLOAD), backend
+    assert stats["preempted"] >= 1, stats
+    assert stats["prefill_chunks"] >= 1, stats
 
 
 def test_pressure_workload_completes_where_it_previously_oomed():
