@@ -28,6 +28,7 @@ MODULES = [
     "fig13_variants",        # Fig. 13
     "roofline",              # EXPERIMENTS.md §Roofline source
     "decode_trajectory",     # fused-vs-eager TPOT baseline artifact
+    "shard_scaling",         # device-count sweep -> BENCH_shard.json
 ]
 
 PRESETS = {

@@ -1,0 +1,148 @@
+"""Shard-scaling benchmark: decode TPOT + makespan vs device count.
+
+Sweeps fake-device counts (1 / 2 / 4 by default) and, for each, runs
+the SPMD sharded decode engine (``distributed/``) on a ``Dx1`` mesh
+over the same doc-QA workload in a **subprocess** (the device count is
+fixed at jax backend init, so every count needs its own process).
+Each child reports warm-pass decode TPOT, the sharded plan's measured
+makespan estimate, and the ICI-aware *predicted* makespan (slowest
+shard + ``CostModel.merge_cost`` — the term the scheduler charges for
+cross-device POR merges); the parent collects everything into
+``BENCH_shard.json`` next to ``BENCH_decode.json``.
+
+Wall-clock on CPU fake devices measures dispatch/collective overhead,
+not ICI: read TPOT as a regression canary and the makespan columns as
+the model-level scaling story (paper §5 extended across a mesh).
+
+``python -m benchmarks.shard_scaling [--preset smoke] [--devices 1,2,4]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+OUT = os.environ.get("BENCH_SHARD_OUT", "BENCH_shard.json")
+
+CHILD = textwrap.dedent("""\
+    import json, os, sys, time
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%(devices)d")
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import DecodeEngine
+    from repro.distributed import decode_mesh
+
+    DEV = %(devices)d
+    DOC_LEN = %(doc_len)d
+    REQUESTS = %(requests)d
+    MAX_NEW = %(max_new)d
+    PAGE = 16
+
+    cfg = smoke_config("%(arch)s")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    doc = list(range(10, 10 + DOC_LEN))
+    eng = DecodeEngine(cfg, params, page_size=PAGE, num_pages=1024,
+                       backend="%(backend)s", max_q=max(REQUESTS, 8),
+                       temperature=0.0, fused=True,
+                       mesh=decode_mesh(DEV, 1),
+                       seq_split_pages=2 if DEV > 1 else 0)
+    passes = []
+    for pno in range(2):
+        prompts = [doc + [200 + 16 * pno + 4 * i + j for j in range(4)]
+                   for i in range(REQUESTS)]
+        for p in prompts:
+            eng.add_request(p, max_new=MAX_NEW)
+        eng.step()                       # absorb prefill + first compile
+        steps0 = eng.stats["steps"]
+        t0 = time.perf_counter()
+        while eng.has_work():
+            eng.step()
+        eng.flush_tokens()
+        jax.block_until_ready(eng.pool.k)
+        wall = time.perf_counter() - t0
+        steps = max(eng.stats["steps"] - steps0, 1)
+        passes.append(dict(wall_s=wall, steps=steps,
+                           tpot_ms=wall / steps * 1e3))
+    sp = eng._sharded_plans.get(0)
+    out = dict(devices=DEV, tpot_ms=passes[1]["tpot_ms"],
+               steps=passes[1]["steps"],
+               compile_count=eng.fused_cache_size,
+               bucket_signatures=len(eng.bucket_signatures),
+               replans=eng.stats["replans"],
+               makespan_us=sp.makespan * 1e6,
+               merge_cost_us=sp.merge_cost * 1e6,
+               local_makespan_us=(sp.makespan - sp.merge_cost) * 1e6,
+               seq_splits=sp.seq_splits,
+               shard_occupancy=eng.pool.shard_occupancy())
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def run_child(devices: int, arch: str, backend: str, doc_len: int,
+              requests: int, max_new: int) -> dict:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)          # the child pins its own
+    code = CHILD % dict(devices=devices, arch=arch, backend=backend,
+                        doc_len=doc_len, requests=requests,
+                        max_new=max_new)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"child ({devices} devices) failed:\n"
+                       f"{r.stdout[-1500:]}\n{r.stderr[-3000:]}")
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--devices", default="1,2,4")
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--backend", default="codec-xla")
+    args, _ = ap.parse_known_args()
+
+    smoke = args.preset == "smoke"
+    doc_len, requests, max_new = (96, 4, 8) if smoke else (256, 8, 16)
+    counts = [int(x) for x in args.devices.split(",") if x]
+    result = {"arch": args.arch, "backend": args.backend,
+              "preset": args.preset,
+              "config": dict(doc_len=doc_len, requests=requests,
+                             max_new=max_new),
+              "sweep": []}
+    base_tpot = None
+    for n in counts:
+        row = run_child(n, args.arch, args.backend, doc_len, requests,
+                        max_new)
+        if base_tpot is None:
+            base_tpot = row["tpot_ms"]
+        row["tpot_vs_1dev"] = row["tpot_ms"] / max(base_tpot, 1e-9)
+        result["sweep"].append(row)
+        emit("shard_scaling", f"{n}dev",
+             us_per_call=row["tpot_ms"] * 1e3,
+             tpot_ms=row["tpot_ms"],
+             makespan_us=row["makespan_us"],
+             merge_cost_us=row["merge_cost_us"],
+             seq_splits=row["seq_splits"],
+             compiles=row["compile_count"])
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=1)
+    span = ", ".join(f"{r['devices']}dev {r['makespan_us']:.1f}us"
+                     f" (merge {r['merge_cost_us']:.2f}us)"
+                     for r in result["sweep"])
+    print(f"# wrote {OUT}: predicted makespan {span}")
+
+
+if __name__ == "__main__":
+    main()

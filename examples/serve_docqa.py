@@ -41,10 +41,10 @@ WAVE2 = questions(doc_b, 2)
 WAVE3 = questions(doc_a, 2)
 
 
-def run(backend: str, num_pages: int = 2048, **policy):
+def run(backend: str, num_pages: int = 2048, mesh=None, **policy):
     eng = DecodeEngine(cfg, params, page_size=16, num_pages=num_pages,
                        backend=backend, max_q=16, temperature=0.0,
-                       **policy)
+                       mesh=mesh, **policy)
     t0 = time.time()
     # wave 1: three questions on doc A
     for p in WAVE1:
@@ -75,6 +75,10 @@ def run(backend: str, num_pages: int = 2048, **policy):
               f"{eng.pool.num_pages} pages, {st['preempted']} preemptions, "
               f"{st['reclaimed']} reclaims, {st['recompute_tokens']} "
               f"recomputed tokens, {st['prefill_chunks']} prefill chunks")
+    if mesh is not None:
+        occ = "/".join(f"{o:.0%}" for o in eng.pool.shard_occupancy())
+        print(f"    mesh {mesh.shape['data']}x{mesh.shape['model']}: "
+              f"per-shard pool occupancy {occ}")
     return {r: req.generated for r, req in eng.requests.items()}
 
 
@@ -92,3 +96,16 @@ out_tight = run("codec-pallas", num_pages=13, prefill_chunk=32,
 assert out_tight == out_codec, \
     "preempt-and-recompute must not change the tokens"
 print("undersized pool (preemption + chunked prefill) outputs: OK")
+
+# SPMD sharded serving (distributed/): the whole decode step traced
+# under shard_map over a (data, model) mesh.  In-process this demo gets
+# whatever devices exist (a 1x1 mesh on a plain run — the full sharded
+# code path, collectives degenerate); launch/serve.py --mesh DxM runs
+# real multi-device meshes via fake host devices.
+from repro.distributed import decode_mesh  # noqa: E402
+
+mesh = decode_mesh(1, 1)
+out_mesh = run("codec-xla", mesh=mesh, fused=True)
+assert out_mesh == out_codec, \
+    "sharded engine must reproduce the single-device tokens"
+print("SPMD mesh engine outputs: OK")

@@ -123,6 +123,27 @@ class CostModel:
             return self._interp(n_q, n)
         return self.analytic(n_q, n)
 
+    # ------------------------------------------------------------------ #
+    # cross-device merge term (sequence-parallel POR over ICI)
+    # ------------------------------------------------------------------ #
+    def merge_cost(self, n_splits: int, n_q: int) -> float:
+        """Estimated seconds to POR-merge ``n_splits`` sequence-parallel
+        partials of ``n_q`` queries across devices.
+
+        The butterfly merge (``kernels.por.por_allmerge``) runs
+        ``ceil(log2 n_splits)`` ppermute rounds; each round moves one
+        partial set — ``(o, m, l)`` is ``n_q * h_q * (d + 2)`` f32 values
+        — over an ICI link and pays one launch.  The scheduler charges
+        this to every sequence-split it creates, so splitting a long
+        shared-prefix node across devices must beat the wire cost it
+        introduces.
+        """
+        if n_splits <= 1 or n_q <= 0:
+            return 0.0
+        rounds = int(np.ceil(np.log2(n_splits)))
+        wire = n_q * self.h_q * (self.d + 2) * 4  # f32 o/m/l per round
+        return rounds * (wire / self.hw.ici_bw + self.hw.launch_overhead)
+
     # convenience for the scheduler: is a task memory- or compute-bound?
     def bound(self, n_q: int, n: int) -> str:
         t_flop = self.flops(n_q, n) / self.hw.peak_flops

@@ -311,7 +311,9 @@ def bucket_pow2(n: int, floor: int = 1) -> int:
     return max(floor, 1 << (n - 1).bit_length())
 
 
-def bucket_plan(plan: DecodePlan, num_rows: int) -> DecodePlan:
+def bucket_plan(plan: DecodePlan, num_rows: int,
+                steps: Optional[int] = None, tasks: Optional[int] = None,
+                pages: Optional[int] = None) -> DecodePlan:
     """Bucket every plan shape the fused (jitted) decode step sees.
 
     ``pad_plan`` already buckets the step axis; this additionally buckets
@@ -327,13 +329,19 @@ def bucket_plan(plan: DecodePlan, num_rows: int) -> DecodePlan:
     ``seg_ids`` entries pointing at the old trash segment
     (``plan.num_queries``) are re-pointed at ``num_rows``; real query
     rows are below the live batch size and therefore below ``num_rows``.
+
+    Explicit ``steps``/``tasks``/``pages`` targets override the per-axis
+    power-of-two defaults (the sharded planner buckets every shard to
+    the common maxima so the stacked per-shard arrays stay rectangular).
     """
     if num_rows < plan.num_queries:
         raise ValueError(
             f"bucketed rows {num_rows} < live queries {plan.num_queries}")
-    p = pad_plan(plan, steps=bucket_pow2(plan.max_steps),
-                 tasks=bucket_pow2(plan.task_qnum.shape[0]))
-    pages = bucket_pow2(p.max_pages)
+    p = pad_plan(plan, steps=steps or bucket_pow2(plan.max_steps),
+                 tasks=tasks or bucket_pow2(plan.task_qnum.shape[0]))
+    pages = pages or bucket_pow2(p.max_pages)
+    if pages < p.max_pages:
+        raise ValueError("page bucket target smaller than plan")
     task_pages = np.zeros((p.task_qnum.shape[0], pages), np.int32)
     task_pages[:, :p.max_pages] = p.task_pages
     seg = p.seg_ids.copy()
@@ -377,6 +385,102 @@ def pad_plan(plan: DecodePlan, steps: Optional[int] = None,
         task_pages=pad_task(plan.task_pages),
         q_gather=pad_task(plan.q_gather), q_pos=pad_task(plan.q_pos),
         seg_ids=seg)
+
+
+# --------------------------------------------------------------------- #
+# mesh-aware plan partitioning (distributed serving)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ShardedPlan:
+    """One ``DecodePlan`` per data-shard, bucketed to COMMON shapes.
+
+    Every shard's arrays share the same (steps, tasks, pages, rows)
+    buckets so the engine can ``np.stack`` the per-shard prepared arrays
+    into ``(D, ...)`` device inputs sharded over the mesh's ``data``
+    axis; page ids inside each shard's arrays are *local* (row ids
+    within that shard's pool block, including its trash row).  Queries
+    are replicated: per-shard ``seg_ids`` still target global query
+    rows, and the cross-device POR merge folds the per-shard partials.
+    """
+
+    shards: List[DecodePlan]
+    num_shards: int
+    makespan: float            # slowest shard + ICI merge term
+    merge_cost: float          # cross-device POR merge estimate (s)
+    seq_splits: int            # subtasks cut at a shard boundary
+
+    def stats(self) -> Dict[str, float]:
+        local = [p.makespan for p in self.shards]
+        occ = [p.stats()["grid_occupancy"] for p in self.shards]
+        return dict(num_shards=self.num_shards, makespan=self.makespan,
+                    merge_cost=self.merge_cost, seq_splits=self.seq_splits,
+                    shard_makespans=local,
+                    shard_imbalance=(max(local) / (sum(local) / len(local))
+                                     if local and sum(local) > 0 else 1.0),
+                    mean_grid_occupancy=sum(occ) / max(len(occ), 1))
+
+
+def build_sharded_plan(forest: PrefixForest,
+                       cost_model: CostModel,
+                       num_shards: int,
+                       page_stride: int,
+                       num_lanes: int = 2,
+                       max_q: int = 64,
+                       max_kv_per_task: Optional[int] = 4096,
+                       req_rows: Optional[Dict[int, int]] = None,
+                       window: int = 0,
+                       truncate: Optional[Dict[int, int]] = None,
+                       num_rows: Optional[int] = None) -> ShardedPlan:
+    """Compile a forest into per-data-shard DecodePlans for SPMD decode.
+
+    ``page_stride`` is the per-shard pool block size in page rows
+    (``pages_per_shard + 1`` — the last row of each block is that
+    shard's trash page): global page row ``g`` lives on shard
+    ``g // page_stride`` as local row ``g % page_stride``.  Division
+    happens over ``num_shards * num_lanes`` (device, half) slots;
+    subtasks are cut at shard boundaries (a *sequence split* of the
+    node — its partials meet again in the cross-device POR merge, whose
+    ICI cost the scheduler charges); each shard's subtasks are then
+    LPT-balanced over its own ``num_lanes`` halves and compiled with
+    the standard single-device machinery.
+    """
+    from .scheduler import divide_and_schedule_sharded
+
+    if req_rows is None:
+        req_rows = {r: i for i, r in enumerate(forest.request_ids)}
+    active = set(req_rows)
+    tasks = tasks_from_forest(forest, truncate, active)
+    node_by_id = {n.id: n for n in forest.real_nodes()}
+    sched = divide_and_schedule_sharded(
+        tasks, cost_model, num_shards, num_lanes, forest.block_size,
+        node_pages=lambda nid: node_by_id[nid].page_ids,
+        shard_of_page=lambda g: g // page_stride,
+        num_queries=len(req_rows),
+        max_kv_per_task=max_kv_per_task, max_q_per_task=max_q)
+
+    shards = [build_plan(forest, cost_model, num_lanes, max_q,
+                         max_kv_per_task, schedule=s, req_rows=req_rows,
+                         window=window, truncate=truncate)
+              for s in sched.shards]
+
+    # common buckets so stacked (D, ...) arrays stay rectangular
+    rows = num_rows if num_rows is not None else len(req_rows)
+    steps_t = bucket_pow2(max(p.max_steps for p in shards))
+    tasks_t = bucket_pow2(max(p.task_qnum.shape[0] for p in shards))
+    pages_t = bucket_pow2(max(p.max_pages for p in shards))
+    out = []
+    for p in shards:
+        p = bucket_plan(p, rows, steps=steps_t, tasks=tasks_t,
+                        pages=pages_t)
+        # global page rows -> shard-local rows.  Padding/foreign entries
+        # fold into [0, stride) too — they are masked (step_valid = 0 /
+        # kvlen bounds) everywhere, so reading a wrong-but-resident local
+        # page is harmless.
+        p.step_page = p.step_page % page_stride
+        p.task_pages = p.task_pages % page_stride
+        out.append(p)
+    return ShardedPlan(out, num_shards, sched.makespan, sched.merge_cost,
+                       sched.seq_splits)
 
 
 def _relane(subs: Sequence[SubTask], schedule: Schedule, num_lanes: int):

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -226,6 +226,102 @@ def lpt(subtasks: Sequence[SubTask], num_lanes: int) -> Tuple[List[int], List[fl
         lane_of[i] = lane
         lane_cost[lane] += subtasks[i].cost
     return lane_of, lane_cost
+
+
+# --------------------------------------------------------------------- #
+# sharded scheduling: lanes become (device, megacore-half) slots
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ShardedSchedule:
+    """Per-data-shard schedules + the ICI merge term of sequence splits.
+
+    ``shards[s]`` is the lane schedule executed by data-shard ``s`` (its
+    lanes are that device's megacore halves); ``seq_splits`` counts
+    subtasks that were cut at a shard boundary (their partials meet in
+    the cross-device POR merge); ``merge_cost`` is the estimated ICI
+    cost of that merge, charged once on top of the slowest shard.
+    """
+
+    shards: List[Schedule]
+    seq_splits: int
+    merge_cost: float
+
+    @property
+    def makespan(self) -> float:
+        local = max((s.makespan for s in self.shards), default=0.0)
+        return local + self.merge_cost
+
+
+def split_at_shard_boundaries(subs: Sequence[SubTask], node_pages,
+                              shard_of_page, page_size: int,
+                              cost: CostModel,
+                              ) -> Tuple[List[List[SubTask]], int]:
+    """Cut each subtask where its page run crosses a data-shard boundary.
+
+    ``node_pages(node_id)`` returns the node's page-id list;
+    ``shard_of_page(page_id)`` its owning shard.  Returns per-shard
+    subtask lists plus the number of *nodes* whose KV ended up on more
+    than one shard (sequence splits — their partials meet again in the
+    cross-device POR merge).  Subtasks cut mid-slice are surcharged with
+    the cost-model's ICI merge term so LPT balancing sees the true
+    price of a sequence split.
+    """
+    ps = page_size
+    out: Dict[int, List[SubTask]] = {}
+    node_shards: Dict[int, set] = {}
+    for s in subs:
+        pages = node_pages(s.node_id)
+        p_lo = s.kv_lo // ps
+        p_hi = -(-s.kv_hi // ps)
+        runs: List[Tuple[int, int, int]] = []   # (shard, page_a, page_b)
+        for pi in range(p_lo, p_hi):
+            sh = shard_of_page(pages[pi])
+            node_shards.setdefault(s.node_id, set()).add(sh)
+            if runs and runs[-1][0] == sh:
+                runs[-1] = (sh, runs[-1][1], pi + 1)
+            else:
+                runs.append((sh, pi, pi + 1))
+        surcharge = cost.merge_cost(len(runs), s.n_q) if len(runs) > 1 else 0.0
+        for sh, pa, pb in runs:
+            lo = max(s.kv_lo, pa * ps)
+            hi = min(s.kv_hi, pb * ps)
+            out.setdefault(sh, []).append(
+                SubTask(s.node_id, s.q_lo, s.q_hi, lo, hi,
+                        cost(s.n_q, hi - lo) + surcharge))
+    seq_splits = sum(1 for shards in node_shards.values() if len(shards) > 1)
+    shards = [out.get(sh, []) for sh in range(max(out, default=0) + 1)]
+    return shards, seq_splits
+
+
+def divide_and_schedule_sharded(tasks: Sequence[TaskSpec], cost: CostModel,
+                                num_shards: int, lanes_per_shard: int,
+                                page_size: int, node_pages, shard_of_page,
+                                num_queries: int,
+                                max_kv_per_task: Optional[int] = None,
+                                max_q_per_task: Optional[int] = None,
+                                ) -> ShardedSchedule:
+    """Mesh-aware §5.1 solver: divide over ``num_shards *
+    lanes_per_shard`` (device, half) slots, force shard assignment by
+    page residency (cutting sequence-split subtasks at shard
+    boundaries), then LPT each shard's subtasks over its own halves.
+
+    The returned makespan charges the cross-device POR merge of the
+    live batch (``CostModel.merge_cost``) on top of the slowest shard.
+    """
+    base = divide_and_schedule(tasks, cost, num_shards * lanes_per_shard,
+                               page_size, max_kv_per_task=max_kv_per_task,
+                               max_q_per_task=max_q_per_task)
+    per_shard, seq_splits = split_at_shard_boundaries(
+        base.subtasks, node_pages, shard_of_page, page_size, cost)
+    per_shard += [[] for _ in range(num_shards - len(per_shard))]
+    shards = []
+    for subs in per_shard[:num_shards]:
+        lane_of, lane_cost = lpt(subs, lanes_per_shard)
+        shards.append(Schedule(subs, lane_of, lane_cost,
+                               base.cost_lower_bound))
+    merge = (cost.merge_cost(num_shards, num_queries)
+             if num_shards > 1 else 0.0)
+    return ShardedSchedule(shards, seq_splits, merge)
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,17 @@
+"""Multi-device SPMD serving: sharded KV pool + sharded fused step.
+
+The layer between the plan compiler and the kernels that lets one
+engine serve prefixes and batches larger than a single device's HBM
+(DESIGN.md §9):
+
+* ``mesh.py``     — decode mesh builders (``data`` x ``model`` axes);
+* ``kv_pool.py``  — ``ShardedKVPool``: paged KV partitioned pages ->
+  ``data``, heads -> ``model``, with per-shard allocator invariants;
+* ``step_fn.py``  — the fused decode step traced under ``shard_map``:
+  per-shard plan partials, cross-device POR butterfly merge, head-TP
+  output projection, replicated sampling.
+"""
+
+from .kv_pool import ShardedKVPool, ShardedPageAllocator  # noqa: F401
+from .mesh import decode_mesh, parse_mesh                 # noqa: F401
+from .step_fn import ShardedStepBase, make_sharded_step_fn  # noqa: F401

@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .compat import _CompilerParams
+from . import ref as ref_mod
 
 
 def _por_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
@@ -66,3 +67,40 @@ def por(o1: jnp.ndarray, m1: jnp.ndarray, l1: jnp.ndarray,
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(o1, m1, l1, o2, m2, l2)
+
+
+# --------------------------------------------------------------------- #
+# cross-device sequence-parallel merge (SPMD decode, under shard_map)
+# --------------------------------------------------------------------- #
+def por_allmerge(o: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
+                 axis_name: str, axis_size: int,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """All-reduce the per-query partials over a mesh axis using POR only.
+
+    Recursive-doubling butterfly: ``log2(axis_size)`` ``ppermute``
+    rounds, each followed by one pairwise POR merge — no ``psum`` and no
+    ``all_gather`` (an LSE merge is not a sum, so ``psum`` cannot
+    express it, and gathering all partials would move ``axis_size``
+    copies instead of ``log2``).  After the last round every device
+    holds the full merge **bitwise identically**: the pairwise POR is
+    commutative at float level (``max`` and two-term adds commute
+    bitwise), so XOR partners compute equal results each round.
+
+    Requires ``axis_size`` to be a power of two (mesh data axes are).
+    Partials over disjoint KV slices are exactly what this merges — each
+    data-shard's plan covers only the KV pages resident on that shard.
+    """
+    if axis_size <= 1:
+        return o, m, l
+    if axis_size & (axis_size - 1):
+        raise ValueError(f"por_allmerge needs a power-of-two axis, "
+                         f"got {axis_size}")
+    shift = 1
+    while shift < axis_size:
+        perm = [(i, i ^ shift) for i in range(axis_size)]
+        o2 = jax.lax.ppermute(o, axis_name, perm)
+        m2 = jax.lax.ppermute(m, axis_name, perm)
+        l2 = jax.lax.ppermute(l, axis_name, perm)
+        o, m, l = ref_mod.por_ref(o, m, l, o2, m2, l2)
+        shift *= 2
+    return o, m, l

@@ -20,7 +20,12 @@ Capability flags let callers pick viable backends per scenario:
 * ``supports_window``  — honours sliding-window masks (``window > 0``);
 * ``supports_gqa``     — handles h_q > n_kv head layouts;
 * ``plan_kind``        — which planner the engine must run for it:
-  ``"codec"`` (shared-prefix plan) or ``"flash"`` (per-request plan).
+  ``"codec"`` (shared-prefix plan) or ``"flash"`` (per-request plan);
+* ``shardable``        — the backend's jit-safe partials can trace
+  inside the SPMD sharded decode step (``distributed/step_fn.py``):
+  they consume only per-shard plan arrays + the local KV pool block,
+  so one program instance per device computes that device's partials
+  and the engine POR-merges across the mesh.
 
 Registered backends: ``codec-pallas``, ``codec-xla``, ``flash``,
 ``hydragen``, and the python oracle ``ref``.
@@ -60,6 +65,12 @@ class AttentionBackend:
 
     ``jit_safe`` is derived from their presence; the engine falls back
     to the eager per-layer path for backends without them (``ref``).
+
+    ``shardable`` additionally promises the jit-safe contract holds
+    per-shard: ``partials_arrays_fn`` sees only a device-local KV pool
+    block and a shard-local plan, and its per-query ``(o, m, l)`` over
+    that slice is a valid POR partial (the distributed engine merges
+    shards with ``kernels.por.por_allmerge``).
     """
 
     name: str
@@ -72,6 +83,7 @@ class AttentionBackend:
     description: str = ""
     partials_arrays_fn: Optional[Callable[..., Tuple]] = None
     advance_fn: Optional[Callable[[Any, Any], Any]] = None
+    shardable: bool = False
 
     @property
     def jit_safe(self) -> bool:
@@ -120,13 +132,16 @@ def get(name: str) -> AttentionBackend:
 
 
 def names(*, window: Optional[bool] = None,
-          gqa: Optional[bool] = None) -> List[str]:
+          gqa: Optional[bool] = None,
+          shardable: Optional[bool] = None) -> List[str]:
     """Registered backend names, optionally filtered by capability."""
     out = []
     for n, b in sorted(_REGISTRY.items()):
         if window is not None and b.supports_window != window:
             continue
         if gqa is not None and b.supports_gqa != gqa:
+            continue
+        if shardable is not None and b.shardable != shardable:
             continue
         out.append(n)
     return out
@@ -166,6 +181,7 @@ register(AttentionBackend(
     partials_fn=_codec_partials("pallas"),
     partials_arrays_fn=_codec_partials_arrays("pallas"),
     advance_fn=ops.advance_plan_arrays,
+    shardable=True,
     description="CoDec PAC Pallas kernel over the lane-scheduled plan "
                 "(interpret mode on CPU, compiled on TPU)"))
 
@@ -174,6 +190,7 @@ register(AttentionBackend(
     partials_fn=_codec_partials("xla"),
     partials_arrays_fn=_codec_partials_arrays("xla"),
     advance_fn=ops.advance_plan_arrays,
+    shardable=True,
     description="CoDec plan semantics as dense vectorised XLA ops "
                 "(what the distributed serve_step lowers)"))
 

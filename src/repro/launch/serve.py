@@ -22,6 +22,7 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -60,16 +61,37 @@ def main() -> int:
                     help="fused single-dispatch decode step with async "
                          "dispatch (serving/step_fn.py); falls back to "
                          "the eager path for non-jit-safe backends")
+    ap.add_argument("--mesh", default="1x1",
+                    help="DATAxMODEL decode mesh for SPMD sharded serving "
+                         "(distributed/; implies --fused, needs a "
+                         "shardable backend).  >1 total devices forces "
+                         "fake host devices when XLA_FLAGS is unset")
+    ap.add_argument("--seq-split-pages", type=int, default=0,
+                    help="placement quota: pages a node keeps on one "
+                         "data shard before sequence-splitting to the "
+                         "next (0 = split only when a shard fills)")
     ap.add_argument("--max-steps", type=int, default=0,
                     help="engine step budget (0 = max-new + slack)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.distributed.mesh import parse_mesh
+    mesh_d, mesh_m = parse_mesh(args.mesh)
+    if mesh_d * mesh_m > 1 and "XLA_FLAGS" not in os.environ:
+        # must land before the jax backend initialises (first device use)
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={mesh_d * mesh_m}")
+
     import jax
     import numpy as np
     from repro.configs import get_config, smoke_config
+    from repro.distributed.mesh import decode_mesh
     from repro.models import transformer as T
     from repro.serving.engine import DecodeEngine
+
+    mesh = decode_mesh(mesh_d, mesh_m) if mesh_d * mesh_m > 1 else None
+    if mesh is not None:
+        args.fused = True                 # mesh serving is fused-only
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.encoder_layers:
@@ -90,7 +112,8 @@ def main() -> int:
                            prefill_chunk=args.prefill_chunk,
                            reserve_pages=args.reserve_pages,
                            max_running=args.max_running,
-                           fused=args.fused)
+                           fused=args.fused, mesh=mesh,
+                           seq_split_pages=args.seq_split_pages)
         t0 = time.time()
         for p in prompts:
             eng.add_request(p, max_new=args.max_new)
@@ -121,11 +144,22 @@ def main() -> int:
                   f"{st['decode_dispatch_time']:.3f}s / sync "
                   f"{st['decode_sync_time']:.3f}s")
         peak = eng.pool.allocator.peak_used
+        shard_occ = ""
+        if mesh is not None:
+            occ = eng.pool.shard_occupancy()
+            shard_occ = (" | shard occupancy "
+                         + "/".join(f"{o:.0%}" for o in occ))
+            # max over per-window plans (a node split across shards
+            # appears in every window's plan); last epoch's snapshot
+            splits = max((sp.seq_splits
+                          for sp in eng._sharded_plans.values()),
+                         default=0)
+            shard_occ += f", {splits} seq-split nodes (last plan)"
         print(f"    memory pressure: peak {peak}/{eng.pool.num_pages} pages "
               f"({100 * peak / eng.pool.num_pages:.0f}%), "
               f"{st['preempted']} preemptions, {st['reclaimed']} reclaims, "
               f"{st['recompute_tokens']} recomputed tokens, "
-              f"{st['prefill_chunks']} prefill chunks")
+              f"{st['prefill_chunks']} prefill chunks{shard_occ}")
         unfinished = [r for r, q in eng.requests.items()
                       if len(q.generated) < q.max_new]
         if unfinished:
@@ -134,10 +168,13 @@ def main() -> int:
         return outs
 
     if args.compare:
+        # flash (per-request baseline) is not shardable; on a mesh the
+        # comparison pair is the two shardable codec backends instead
+        other = "codec-xla" if mesh is not None else "flash"
         o1 = run("codec-pallas")
-        o2 = run("flash")
+        o2 = run(other)
         match = o1 == o2
-        print(f"outputs codec == flash: {match}")
+        print(f"outputs codec == {other}: {match}")
         return 0 if match else 1
     run(args.backend)
     return 0

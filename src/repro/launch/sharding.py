@@ -190,6 +190,30 @@ def cache_shardings(cache_like: PyTree, mesh, cfg: ModelConfig,
     return jax.tree_util.tree_map_with_path(one, cache_like)
 
 
+def paged_pool_spec(mesh, n_kv: int) -> P:
+    """PartitionSpec for the serving engine's paged KV pool
+    ``(n_attn, page_rows, page, n_kv, head_dim)``.
+
+    Page rows shard over ``data`` (each data-shard owns a contiguous
+    block of pages incl. its trash row), KV heads over ``model`` — the
+    same head axis the TP param rules put on ``model``, so q/k/v head
+    slices and pool head slices line up device-for-device.  Heads stay
+    replicated when they do not divide the axis (``model`` = 1 meshes,
+    odd head counts)."""
+    # the spec is kept in shard_map's normal form — size-1 axes dropped,
+    # trailing Nones trimmed: PartitionSpec compares structurally in jit
+    # signatures, and a canonical-vs-emitted mismatch would recompile
+    # the fused step on its second dispatch
+    shape = dict(mesh.shape)
+    data = "data" if shape.get("data", 1) > 1 else None
+    model = shape.get("model", 1)
+    heads = "model" if model > 1 and n_kv % model == 0 else None
+    spec = [None, data, None, heads, None]
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
 def _tail_rank(name: str) -> int:
     return {"k": 4, "v": 4, "xk": 4, "xv": 4, "conv": 3, "ssm": 4}.get(name, 0)
 

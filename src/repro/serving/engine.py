@@ -38,7 +38,15 @@ memory pressure instead of raising ``MemoryError``:
   sampled tokens as placeholders and syncs only at plan-rebuild /
   admission / eviction / completion boundaries
   (``flush_tokens``, DESIGN.md §8); backends that cannot trace
-  (``ref``) transparently fall back to the eager per-layer path.
+  (``ref``) transparently fall back to the eager per-layer path;
+* with ``mesh=`` (a ``(data, model)`` jax mesh) the engine serves SPMD
+  (DESIGN.md §9): the KV pool shards pages over ``data`` and heads
+  over ``model`` (``distributed.ShardedKVPool``, per-shard allocator
+  invariants), plans are partitioned per data shard with sequence
+  splits cut at shard boundaries (``core.plan.build_sharded_plan``),
+  and the fused step traces under ``shard_map`` with a cross-device
+  POR butterfly merge (``distributed/step_fn.py``) — token streams
+  stay byte-identical to the single-device engine at any mesh shape.
 
 Under greedy decoding the token streams are independent of memory
 pressure: a preempted-and-recomputed request produces exactly the same
@@ -138,7 +146,8 @@ class DecodeEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk=None, reserve_pages: int = 0,
                  max_running: Optional[int] = None,
-                 fused: bool = False):
+                 fused: bool = False,
+                 mesh=None, seq_split_pages: int = 0):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -149,6 +158,26 @@ class DecodeEngine:
                         for k in cfg.layer_pattern)):
             raise ValueError(f"backend {backend!r} cannot serve "
                              f"sliding-window layers")
+        # ---- SPMD mesh mode (distributed/, DESIGN.md §9) -------------- #
+        # mesh != None serves over a (data, model) device mesh: sharded
+        # KV pool, per-shard plans, the whole step under shard_map.
+        self.mesh = mesh
+        if mesh is not None:
+            if not fused:
+                raise ValueError("mesh serving runs only the fused step; "
+                                 "pass fused=True")
+            if not (self._backend.jit_safe and self._backend.shardable):
+                raise ValueError(
+                    f"backend {backend!r} is not shardable; choose one of "
+                    f"{registry_mod.names(shardable=True)}")
+            D, M = mesh.shape["data"], mesh.shape["model"]
+            if D & (D - 1):
+                raise ValueError(f"data axis must be a power of two "
+                                 f"(POR butterfly), got {D}")
+            if M > 1 and (cfg.num_heads % M or cfg.num_kv_heads % M):
+                raise ValueError(
+                    f"model axis {M} must divide heads "
+                    f"({cfg.num_heads} q / {cfg.num_kv_heads} kv)")
         self.page_size = page_size
         self.num_lanes = num_lanes
         self.max_q = max_q
@@ -161,9 +190,16 @@ class DecodeEngine:
             j for j, (k, _) in enumerate(self.layers)
             if k.mixer in ("attn", "attn_local"))}
         n_attn = len(self.attn_layer_idx)
-        self.pool = PagedKVPool(max(n_attn, 1), num_pages, page_size,
-                                max(cfg.num_kv_heads, 1),
-                                max(cfg.head_dim, 1))
+        if mesh is not None:
+            from ..distributed.kv_pool import ShardedKVPool
+            self.pool = ShardedKVPool(max(n_attn, 1), num_pages, page_size,
+                                      max(cfg.num_kv_heads, 1),
+                                      max(cfg.head_dim, 1), mesh=mesh,
+                                      seq_split_pages=seq_split_pages)
+        else:
+            self.pool = PagedKVPool(max(n_attn, 1), num_pages, page_size,
+                                    max(cfg.num_kv_heads, 1),
+                                    max(cfg.head_dim, 1))
         self.forest = tree_mod.PrefixForest(page_size)
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
@@ -183,6 +219,8 @@ class DecodeEngine:
         self._mamba_pos: Dict[int, int] = {}
         # plans keyed by window size (0 = full attention)
         self._plans: Dict[int, Any] = {}
+        # mesh mode: last epoch's ShardedPlan per window (stats/bench)
+        self._sharded_plans: Dict[int, Any] = {}
         self._plan_dirty = True
         self._plan_key: Optional[tuple] = None
         self.replan_interval = replan_interval
@@ -205,7 +243,19 @@ class DecodeEngine:
         self._mamba_layer_js = [j for j, (k, _) in enumerate(self.layers)
                                 if k.mixer == "mamba"]
         self._step_fn = None
-        if self.fused:
+        self._replicated_sharding = None
+        if self.fused and mesh is not None:
+            from ..distributed import step_fn as sharded_step_fn_mod
+            self._step_fn = sharded_step_fn_mod.make_sharded_step_fn(
+                cfg, self._backend, tuple(self._windows()), temperature,
+                mesh)
+            # commit host-built step inputs to the replicated sharding so
+            # the first dispatch and steady-state dispatches share one jit
+            # signature (uncommitted vs replicated would compile twice)
+            self._replicated_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            self.key = jax.device_put(self.key, self._replicated_sharding)
+        elif self.fused:
             self._step_fn = step_fn_mod.make_step_fn(
                 cfg, self._backend, tuple(self._windows()), temperature)
         # epoch state: valid between plan rebuilds
@@ -502,13 +552,15 @@ class DecodeEngine:
         return True
 
     def _alloc_pages(self, n: int, exclude: Set[int],
-                     allow_preempt: bool = True) -> Optional[List[int]]:
+                     allow_preempt: bool = True,
+                     hint: Optional[int] = None) -> Optional[List[int]]:
         """Allocate ``n`` pages, evicting under pressure; ``None`` when
-        nothing more can be reclaimed (caller stalls or raises)."""
+        nothing more can be reclaimed (caller stalls or raises).
+        ``hint`` (node id) is the sharded pool's placement affinity."""
         while self.pool.num_free < n:
             if not self._reclaim_one(exclude, allow_preempt):
                 return None
-        return self.pool.allocator.alloc(n)
+        return self.pool.allocator.alloc(n, hint=hint)
 
     # ------------------------------------------------------------------ #
     # prefill with prefix reuse (chunked, resumable)
@@ -521,7 +573,7 @@ class DecodeEngine:
             need = -(-cover // self.page_size)
             if len(node.page_ids) < need:
                 got = self._alloc_pages(need - len(node.page_ids),
-                                        exclude={rid})
+                                        exclude={rid}, hint=node.id)
                 if got is None:
                     return False
                 node.page_ids += got
@@ -871,7 +923,7 @@ class DecodeEngine:
                 req.generated.append(req.pending)
             req.pending = None
             if -(-leaf.length // self.page_size) > len(leaf.page_ids):
-                got = self._alloc_pages(1, exclude={r})
+                got = self._alloc_pages(1, exclude={r}, hint=leaf.id)
                 if got is None:
                     raise MemoryError(
                         f"KV pool exhausted growing request {r}: nothing "
@@ -1025,6 +1077,8 @@ class DecodeEngine:
             tok = np.zeros(self._fused_bucket, np.int32)
             tok[:len(rows)] = [self.requests[r].generated[-1] for r in rows]
             tok_in = jnp.asarray(tok)
+            if self._replicated_sharding is not None:
+                tok_in = jax.device_put(tok_in, self._replicated_sharding)
 
         # 4. single dispatch: layers + KV writes + attention + merge +
         #    FFN + unembed + sampling, pool/SSM state donated
@@ -1080,38 +1134,43 @@ class DecodeEngine:
         for r in rows:
             leaf = self.forest.nodes[self.forest.leaf_of[r]]
             truncate[leaf.id] = max(0, ((leaf.length - 1) // ps) * ps)
-        build = (plan_mod.flash_plan if self._backend.plan_kind == "flash"
-                 else plan_mod.build_plan)
-        prepared = []
-        sig: List = [bucket]
-        for w in self._windows():
-            p = build(self.forest, self.cost_model, self.num_lanes,
-                      self.max_q, self.max_kv_per_task, req_rows=req_rows,
-                      window=w, truncate=truncate)
-            p = plan_mod.bucket_plan(p, bucket)
-            pr = self._backend.prepare(p)
-            prepared.append(pr)
-            sig.append((w,) + tuple(tuple(a.shape)
-                                    for a in jax.tree.leaves(pr)))
-        self._fused_prepared = tuple(prepared)
-        self.bucket_signatures.add(tuple(sig))
+        if self.mesh is not None:
+            self._sharded_epoch(rows, bucket, req_rows, truncate)
+        else:
+            build = (plan_mod.flash_plan
+                     if self._backend.plan_kind == "flash"
+                     else plan_mod.build_plan)
+            prepared = []
+            sig: List = [bucket]
+            for w in self._windows():
+                p = build(self.forest, self.cost_model, self.num_lanes,
+                          self.max_q, self.max_kv_per_task,
+                          req_rows=req_rows, window=w, truncate=truncate)
+                p = plan_mod.bucket_plan(p, bucket)
+                pr = self._backend.prepare(p)
+                prepared.append(pr)
+                sig.append((w,) + tuple(tuple(a.shape)
+                                        for a in jax.tree.leaves(pr)))
+            self._fused_prepared = tuple(prepared)
+            self.bucket_signatures.add(tuple(sig))
 
-        valid = np.zeros(bucket, bool)
-        valid[:B] = True
-        q_pos0 = np.full(bucket, -1, np.int32)
-        tail_page = np.full(bucket, self.pool.trash_page, np.int32)
-        tail_base = np.zeros(bucket, np.int32)
-        tail_off0 = np.zeros(bucket, np.int32)
-        for i, r in enumerate(rows):
-            q_pos0[i] = self.forest.context_len(r) - 1
-            leaf = self.forest.nodes[self.forest.leaf_of[r]]
-            tp = (leaf.length - 1) // ps
-            tail_page[i] = leaf.page_ids[tp]
-            tail_base[i] = leaf.start_pos + tp * ps
-            tail_off0[i] = (leaf.length - 1) % ps
-        self._fused_base = step_fn_mod.StepBase(
-            jnp.asarray(valid), jnp.asarray(q_pos0), jnp.asarray(tail_page),
-            jnp.asarray(tail_base), jnp.asarray(tail_off0))
+            valid = np.zeros(bucket, bool)
+            valid[:B] = True
+            q_pos0 = np.full(bucket, -1, np.int32)
+            tail_page = np.full(bucket, self.pool.trash_page, np.int32)
+            tail_base = np.zeros(bucket, np.int32)
+            tail_off0 = np.zeros(bucket, np.int32)
+            for i, r in enumerate(rows):
+                q_pos0[i] = self.forest.context_len(r) - 1
+                leaf = self.forest.nodes[self.forest.leaf_of[r]]
+                tp = (leaf.length - 1) // ps
+                tail_page[i] = leaf.page_ids[tp]
+                tail_base[i] = leaf.start_pos + tp * ps
+                tail_off0[i] = (leaf.length - 1) % ps
+            self._fused_base = step_fn_mod.StepBase(
+                jnp.asarray(valid), jnp.asarray(q_pos0),
+                jnp.asarray(tail_page), jnp.asarray(tail_base),
+                jnp.asarray(tail_off0))
         self._fused_rows = list(rows)
         self._fused_bucket = bucket
         self._fused_delta = 0
@@ -1121,6 +1180,64 @@ class DecodeEngine:
         self._steps_since_plan = 0
         self.stats["replans"] += 1
         self.stats["plan_time"] += time.perf_counter() - t0
+
+    def _sharded_epoch(self, rows: List[int], bucket: int,
+                       req_rows: Dict[int, int],
+                       truncate: Dict[int, int]) -> None:
+        """Mesh-mode epoch: per-shard plans + stacked SPMD step inputs.
+
+        One ``DecodePlan`` per data shard (subtasks forced to the shard
+        holding their pages, sequence splits cut at shard boundaries —
+        ``core.plan.build_sharded_plan``), all bucketed to COMMON shapes
+        so the prepared arrays stack into ``(D, ...)`` inputs; the tail
+        layout becomes per-shard local page rows (non-owners point at
+        their shard's trash page).
+        """
+        from ..distributed import step_fn as sharded_step_fn_mod
+        B = len(rows)
+        ps = self.page_size
+        D = self.pool.num_shards
+        stride = self.pool.page_stride
+        self.pool.canonicalize()
+        prepared = []
+        sig: List = [("mesh", D, self.mesh.shape["model"], bucket)]
+        self._sharded_plans = {}
+        for w in self._windows():
+            sp = plan_mod.build_sharded_plan(
+                self.forest, self.cost_model, D, stride,
+                self.num_lanes, self.max_q, self.max_kv_per_task,
+                req_rows=req_rows, window=w, truncate=truncate,
+                num_rows=bucket)
+            self._sharded_plans[w] = sp
+            shard_pr = [self._backend.prepare(p) for p in sp.shards]
+            pr = jax.tree.map(lambda *xs: jnp.stack(xs), *shard_pr)
+            prepared.append(pr)
+            sig.append((w,) + tuple(tuple(a.shape)
+                                    for a in jax.tree.leaves(pr)))
+        self._fused_prepared = tuple(prepared)
+        self.bucket_signatures.add(tuple(sig))
+
+        valid = np.zeros(bucket, bool)
+        valid[:B] = True
+        q_pos0 = np.full(bucket, -1, np.int32)
+        tail_page = np.full((D, bucket), self.pool.local_trash, np.int32)
+        tail_owner = np.zeros((D, bucket), bool)
+        tail_base = np.zeros(bucket, np.int32)
+        tail_off0 = np.zeros(bucket, np.int32)
+        for i, r in enumerate(rows):
+            q_pos0[i] = self.forest.context_len(r) - 1
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            tp = (leaf.length - 1) // ps
+            g = leaf.page_ids[tp]
+            sh = self.pool.shard_of(g)
+            tail_page[sh, i] = self.pool.local_of(g)
+            tail_owner[sh, i] = True
+            tail_base[i] = leaf.start_pos + tp * ps
+            tail_off0[i] = (leaf.length - 1) % ps
+        self._fused_base = sharded_step_fn_mod.ShardedStepBase(
+            jnp.asarray(valid), jnp.asarray(q_pos0),
+            jnp.asarray(tail_page), jnp.asarray(tail_base),
+            jnp.asarray(tail_off0), jnp.asarray(tail_owner))
 
     def _sync_mamba_state(self) -> None:
         """Scatter the batched device SSM state back into the per-request
@@ -1152,6 +1269,9 @@ class DecodeEngine:
                 jnp.concatenate([st[r][0] for r in rows], 0))
             ssm = ssm.at[li, :len(rows)].set(
                 jnp.concatenate([st[r][1] for r in rows], 0))
+        if self._replicated_sharding is not None:
+            conv = jax.device_put(conv, self._replicated_sharding)
+            ssm = jax.device_put(ssm, self._replicated_sharding)
         self._mamba_carry = (conv, ssm)
 
     # ------------------------------------------------------------------ #

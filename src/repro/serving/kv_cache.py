@@ -37,7 +37,10 @@ class PageAllocator:
     def occupancy(self) -> float:
         return self.num_used / max(self.num_pages, 1)
 
-    def alloc(self, n: int) -> List[int]:
+    def alloc(self, n: int, hint: Optional[int] = None) -> List[int]:
+        """``hint`` (a forest node id) is a placement affinity key; the
+        single-shard allocator ignores it (the sharded pool's allocator
+        uses it to keep a node's pages together / sequence-split them)."""
         if n > len(self._free):
             raise MemoryError(
                 f"KV pool exhausted: need {n}, have {len(self._free)}")

@@ -31,6 +31,11 @@ shape-bucketed device function:
 The engine dispatches step *t+1* while the host still holds step *t*'s
 token array as an opaque future — host⇄device syncs happen only at
 plan-rebuild and admission boundaries (see ``DecodeEngine.flush_tokens``).
+
+``distributed/step_fn.py`` is the SPMD sibling: the same program
+traced under ``shard_map`` over a ``(data, model)`` mesh, with
+per-shard plans and a cross-device POR merge (DESIGN.md §9); it reuses
+:class:`StepState` and the donation-warning shim from here.
 """
 
 from __future__ import annotations
