@@ -84,10 +84,9 @@ def main() -> None:
         f = tree_mod.PrefixForest(PAGE)
         rid = 0
         for _ in range(8):            # 8 documents in the batch
-            doc = f._new_node(tree_mod.ROOT_ID,
-                              doc_len // PAGE * PAGE, 0)
+            doc = f.add_node(tree_mod.ROOT_ID, doc_len // PAGE * PAGE)
             for _ in range(4):        # 4 questions per doc (91% sharing)
-                leaf = f._new_node(doc.id, 64, doc.end_pos)
+                leaf = f.add_node(doc.id, 64)
                 f.attach_request(rid, leaf.id)
                 rid += 1
         plan_mod.assign_dense_pages(f)

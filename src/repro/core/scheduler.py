@@ -94,6 +94,14 @@ class AdmissionPolicy:
     ``reserve_pages``: low watermark — admission never dips the free list
     below it, keeping headroom for decode growth of the running batch.
     ``max_running``: cap on admitted (prefilling + decoding) requests.
+
+    ``draft_reserve_pages``: extra per-running-request headroom the
+    speculative engine keeps for draft-tree pages (each draft node
+    occupies one page for the duration of a verify step).  Draft
+    allocation itself is best-effort — the engine skips proposing
+    rather than evicting to make room — so this watermark only shapes
+    *admission*, keeping the pool from being packed so tight that
+    speculation never gets to draft.
     """
 
     prefill_chunk: Optional[Union[int, str]] = None
@@ -101,6 +109,11 @@ class AdmissionPolicy:
     max_running: Optional[int] = None
     balance_ratio: float = 4.0
     max_auto_chunk: int = 16384
+    draft_reserve_pages: int = 0
+
+    def admission_reserve(self, num_running: int) -> int:
+        """Free-page watermark admission must stay above."""
+        return self.reserve_pages + self.draft_reserve_pages * num_running
 
     def __post_init__(self):
         pc = self.prefill_chunk

@@ -69,6 +69,59 @@ class PrefixForest:
         self.nodes[parent].children.append(node.id)
         return node
 
+    def add_node(self, parent: int, length: int,
+                 tokens: Optional[np.ndarray] = None) -> Node:
+        """Public node construction: append a child under ``parent``.
+
+        The child starts at ``parent``'s end position (forest nodes are
+        contiguous along a path).  This is the supported way for callers
+        outside the forest — workload builders, draft-tree growers — to
+        create nodes; ``_new_node`` is internal.
+        """
+        if tokens is not None:
+            tokens = np.asarray(tokens)
+            assert len(tokens) == length, (len(tokens), length)
+        return self._new_node(parent, int(length),
+                              self.nodes[parent].end_pos, tokens)
+
+    def add_draft(self, parent: int, token: int) -> Node:
+        """Grow a one-token *draft* node under ``parent``.
+
+        Draft nodes hold speculative continuations (serving/speculation):
+        sibling drafts share all ancestor KV, and each draft node is one
+        branch position a verification plan can query.  They are marked
+        ``meta["draft"] = True`` so engine invariants (eviction, release)
+        can tell them from committed nodes; remove them with
+        ``prune_leaf`` once verification accepts or rejects them.
+        """
+        node = self.add_node(parent, 1, np.asarray([token], np.int32))
+        node.meta["draft"] = True
+        return node
+
+    def detach_request(self, request_id: int) -> None:
+        """Unregister a request from its path (inverse of
+        ``attach_request``); nodes and pages are left in place —
+        the caller decides what to prune/release."""
+        nid = self.leaf_of.pop(request_id)
+        while nid != ROOT_ID:
+            node = self.nodes[nid]
+            node.requests.remove(request_id)
+            nid = node.parent
+
+    def prune_leaf(self, node_id: int) -> List[int]:
+        """Remove a childless, requestless node; returns its ``page_ids``
+        so the caller can release them through the page allocator.
+
+        The draft-tree counterpart of ``add_draft``/``add_node``:
+        rollback prunes rejected draft nodes bottom-up.
+        """
+        node = self.nodes[node_id]
+        assert not node.children, f"prune_leaf({node_id}): has children"
+        assert not node.requests, f"prune_leaf({node_id}): has requests"
+        self.nodes[node.parent].children.remove(node_id)
+        del self.nodes[node_id]
+        return node.page_ids
+
     def add_chain(self, request_id: int, lengths: Sequence[int],
                   parent: int = ROOT_ID) -> int:
         """Append a chain of nodes under ``parent`` and attach a request.
@@ -285,9 +338,9 @@ def two_level(num_requests: int, shared_len: int, unique_len: int,
               block_size: int = 64) -> PrefixForest:
     """Root doc shared by everyone; one private tail per request."""
     f = PrefixForest(block_size)
-    shared = f._new_node(ROOT_ID, shared_len, 0)
+    shared = f.add_node(ROOT_ID, shared_len)
     for r in range(num_requests):
-        leaf = f._new_node(shared.id, unique_len, shared.end_pos)
+        leaf = f.add_node(shared.id, unique_len)
         f.attach_request(r, leaf.id)
     return f
 
@@ -296,12 +349,12 @@ def full_kary(depth: int, arity: int, node_len: int,
               block_size: int = 64) -> PrefixForest:
     """Full k-ary tree of uniform chunks; one request per leaf."""
     f = PrefixForest(block_size)
-    frontier = [f._new_node(ROOT_ID, node_len, 0)]
+    frontier = [f.add_node(ROOT_ID, node_len)]
     for _ in range(depth - 1):
         nxt = []
         for node in frontier:
             for _ in range(arity):
-                nxt.append(f._new_node(node.id, node_len, node.end_pos))
+                nxt.append(f.add_node(node.id, node_len))
         frontier = nxt
     for r, leaf in enumerate(frontier):
         f.attach_request(r, leaf.id)
@@ -311,13 +364,13 @@ def full_kary(depth: int, arity: int, node_len: int,
 def degenerate(depth: int, node_len: int, block_size: int = 64) -> PrefixForest:
     """Left-spine tree (paper's 'DT'): each level, one request leaves."""
     f = PrefixForest(block_size)
-    spine = f._new_node(ROOT_ID, node_len, 0)
+    spine = f.add_node(ROOT_ID, node_len)
     rid = 0
     for _ in range(depth - 1):
-        leaf = f._new_node(spine.id, node_len, spine.end_pos)
+        leaf = f.add_node(spine.id, node_len)
         f.attach_request(rid, leaf.id)
         rid += 1
-        spine = f._new_node(spine.id, node_len, spine.end_pos)
+        spine = f.add_node(spine.id, node_len)
     f.attach_request(rid, spine.id)
     return f
 

@@ -29,6 +29,10 @@ Capability flags let callers pick viable backends per scenario:
 
 Registered backends: ``codec-pallas``, ``codec-xla``, ``flash``,
 ``hydragen``, and the python oracle ``ref``.
+
+Writing a new backend?  ``docs/BACKENDS.md`` is the author guide: the
+partials contract, ``prepare``, the jit-safe ``partials_arrays_fn`` /
+``advance_fn`` pair, capability flags, and a minimal worked example.
 """
 
 from __future__ import annotations

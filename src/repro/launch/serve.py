@@ -61,6 +61,17 @@ def main() -> int:
                     help="fused single-dispatch decode step with async "
                          "dispatch (serving/step_fn.py); falls back to "
                          "the eager path for non-jit-safe backends")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative tree-decoding (DESIGN.md §10): "
+                         "self-drafted token trees verified in one "
+                         "multi-query dispatch; greedy-only, "
+                         "single-device")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="max draft chain length per branch")
+    ap.add_argument("--spec-branch", type=int, default=2,
+                    help="max sibling draft branches at the leaf")
+    ap.add_argument("--spec-nodes", type=int, default=6,
+                    help="total draft nodes per request per step")
     ap.add_argument("--mesh", default="1x1",
                     help="DATAxMODEL decode mesh for SPMD sharded serving "
                          "(distributed/; implies --fused, needs a "
@@ -105,6 +116,12 @@ def main() -> int:
                for _ in range(args.requests)]
     max_steps = args.max_steps or 4 * args.max_new + 16
 
+    spec = None
+    if args.speculative:
+        from repro.serving.speculation import SpecConfig
+        spec = SpecConfig(depth=args.spec_depth, branch=args.spec_branch,
+                          max_nodes=args.spec_nodes)
+
     def run(backend: str):
         eng = DecodeEngine(cfg, params, page_size=args.page_size,
                            num_pages=args.max_pages, backend=backend,
@@ -113,7 +130,8 @@ def main() -> int:
                            reserve_pages=args.reserve_pages,
                            max_running=args.max_running,
                            fused=args.fused, mesh=mesh,
-                           seq_split_pages=args.seq_split_pages)
+                           seq_split_pages=args.seq_split_pages,
+                           speculative=spec)
         t0 = time.time()
         for p in prompts:
             eng.add_request(p, max_new=args.max_new)
@@ -143,6 +161,15 @@ def main() -> int:
                   f"{st['token_flushes']} token syncs, dispatch "
                   f"{st['decode_dispatch_time']:.3f}s / sync "
                   f"{st['decode_sync_time']:.3f}s")
+        if eng.spec is not None:
+            tok_total = sum(len(q.generated)
+                            for q in eng.requests.values())
+            print(f"    speculation: {st['spec_steps']} verify dispatches "
+                  f"for {tok_total} committed tokens; "
+                  f"{st['spec_accepted']}/{st['spec_proposed']} drafts "
+                  f"accepted (+{st['spec_accepted'] / max(st['spec_steps'], 1):.2f} "
+                  f"extra tokens/dispatch, "
+                  f"{st['spec_draft_stalls']} page stalls)")
         peak = eng.pool.allocator.peak_used
         shard_occ = ""
         if mesh is not None:

@@ -39,6 +39,17 @@ memory pressure instead of raising ``MemoryError``:
   admission / eviction / completion boundaries
   (``flush_tokens``, DESIGN.md §8); backends that cannot trace
   (``ref``) transparently fall back to the eager per-layer path;
+* with ``speculative=`` (``True`` or a ``speculation.SpecConfig``) each
+  decode step becomes a draft-propose / tree-verify / accept-rollback
+  loop (DESIGN.md §10): a deterministic n-gram proposer grows a bounded
+  draft tree of ordinary forest nodes under each request's leaf, ONE
+  multi-query dispatch scores every branch head through the backend
+  registry (``core.plan.build_verify_plan`` — sibling branches share
+  all ancestor KV reads), greedy acceptance commits the longest
+  matching path (KV moves from draft pages to the leaf tail) and
+  rollback releases the rejected draft pages — so several tokens can
+  commit per dispatch while the committed stream stays byte-identical
+  to non-speculative greedy decode;
 * with ``mesh=`` (a ``(data, model)`` jax mesh) the engine serves SPMD
   (DESIGN.md §9): the KV pool shards pages over ``data`` and heads
   over ``model`` (``distributed.ShardedKVPool``, per-shard allocator
@@ -73,7 +84,7 @@ from ..kernels import ops, ref as ref_mod, registry as registry_mod
 from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
-from . import sampler, step_fn as step_fn_mod
+from . import sampler, speculation as spec_mod, step_fn as step_fn_mod
 from .kv_cache import PagedKVPool
 
 # request lifecycle states
@@ -147,7 +158,8 @@ class DecodeEngine:
                  prefill_chunk=None, reserve_pages: int = 0,
                  max_running: Optional[int] = None,
                  fused: bool = False,
-                 mesh=None, seq_split_pages: int = 0):
+                 mesh=None, seq_split_pages: int = 0,
+                 speculative=None):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -185,6 +197,34 @@ class DecodeEngine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
+        # ---- speculative tree-decoding mode (DESIGN.md §10) ----------- #
+        # speculative=True (defaults) or a SpecConfig turns each decode
+        # step into a draft-propose / tree-verify / accept-rollback loop:
+        # multiple tokens commit per dispatch when the self-drafting
+        # proposer guesses right.  Greedy-only, attention-only, and
+        # single-device for now (sharded speculation: ROADMAP open item).
+        if speculative is True:
+            speculative = spec_mod.SpecConfig()
+        self.spec: Optional[spec_mod.SpecConfig] = speculative or None
+        if self.spec is not None:
+            if temperature != 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: acceptance "
+                    "compares draft tokens against the argmax (lossless "
+                    "speculative sampling is not implemented)")
+            if any(k.mixer == "mamba" for k in cfg.layer_pattern):
+                raise ValueError(
+                    "speculative decoding needs KV-cache rollback; "
+                    "recurrent (Mamba) state cannot be rolled back yet")
+            if mesh is not None:
+                raise ValueError(
+                    "sharded speculation is not implemented "
+                    "(ROADMAP open item); drop mesh= or speculative=")
+        self.proposer = (spec_mod.NGramProposer(self.spec)
+                         if self.spec else None)
+        self._drafts: Dict[int, spec_mod.DraftState] = {}
+        self._next_virt = -2          # virtual branch-head query ids
+
         self.layers = flat_layers(cfg, params)
         self.attn_layer_idx = {j: a for a, j in enumerate(
             j for j, (k, _) in enumerate(self.layers)
@@ -207,9 +247,10 @@ class DecodeEngine:
                                     max(cfg.num_kv_heads, 1),
                                     max(cfg.head_dim, 1),
                                     page_size=page_size)
-        self.policy = AdmissionPolicy(prefill_chunk=prefill_chunk,
-                                      reserve_pages=reserve_pages,
-                                      max_running=max_running)
+        self.policy = AdmissionPolicy(
+            prefill_chunk=prefill_chunk, reserve_pages=reserve_pages,
+            max_running=max_running,
+            draft_reserve_pages=self.spec.max_nodes if self.spec else 0)
         self.admission = AdmissionController(self.policy, self.cost_model,
                                              page_size)
         self._prefilling: List[int] = []   # admitted, prompt not fully prefilled
@@ -231,7 +272,9 @@ class DecodeEngine:
                       "admitted": 0, "preempted": 0, "reclaimed": 0,
                       "recompute_tokens": 0, "prefill_chunks": 0,
                       "prefill_stalls": 0, "fused_calls": 0,
-                      "token_flushes": 0}
+                      "token_flushes": 0, "spec_steps": 0,
+                      "spec_proposed": 0, "spec_accepted": 0,
+                      "spec_draft_stalls": 0}
         self.step_stats: List[Dict] = []
         self._decode_timing: Dict[str, float] = {}
 
@@ -243,8 +286,14 @@ class DecodeEngine:
         self._mamba_layer_js = [j for j, (k, _) in enumerate(self.layers)
                                 if k.mixer == "mamba"]
         self._step_fn = None
+        self._spec_step_fn = None
         self._replicated_sharding = None
-        if self.fused and mesh is not None:
+        if self.fused and self.spec is not None:
+            # speculative mode replaces the per-token decode dispatch
+            # with the fused multi-query verification dispatch
+            self._spec_step_fn = step_fn_mod.make_spec_step_fn(
+                cfg, self._backend, tuple(self._windows()))
+        elif self.fused and mesh is not None:
             from ..distributed import step_fn as sharded_step_fn_mod
             self._step_fn = sharded_step_fn_mod.make_sharded_step_fn(
                 cfg, self._backend, tuple(self._windows()), temperature,
@@ -310,7 +359,12 @@ class DecodeEngine:
         matched = self.forest.match_len(np.asarray(seq, np.int32))
         need = (-(-max(len(seq), 1) // self.page_size)
                 - matched // self.page_size)
-        return self.pool.num_free - self.policy.reserve_pages >= need
+        # the draft reserve scales with *currently running* requests so an
+        # idle engine always admits its head-of-line request (a reserve
+        # counting the candidate itself could starve admission forever on
+        # a pool barely larger than one working set)
+        reserve = self.policy.admission_reserve(len(self._active_rows()))
+        return self.pool.num_free - reserve >= need
 
     def _admit_phase(self) -> None:
         """Admission + chunked-prefill phase.
@@ -434,6 +488,7 @@ class DecodeEngine:
 
     def _release_kv(self, rid: int) -> None:
         """Drop a request's forest footprint (finished or released)."""
+        self._rollback_drafts(rid)
         for node in reversed(self.forest.path(rid)):
             if node.id not in self.forest.nodes:
                 continue
@@ -450,6 +505,10 @@ class DecodeEngine:
         re-prefilled from the radix-cached prefix."""
         # re-prefill recomputes from token values; sync any deferred ones
         self.flush_tokens()
+        # a victim evicted mid-speculation sheds its draft tree first:
+        # draft nodes/virtual queries would otherwise keep its leaf (and
+        # every ancestor) alive and leak the draft pages
+        self._rollback_drafts(rid)
         req = self.requests[rid]
         assert req.state in (PREFILL, RUNNING), req.state
         if len(req.generated) >= req.max_new:
@@ -494,8 +553,13 @@ class DecodeEngine:
         n = 0
         freeable: Set[int] = set()
         for node in reversed(self.forest.path(rid)):
-            others = [r for r in node.requests if r != rid]
-            kids = set(node.children) - freeable
+            # virtual branch-head queries (< 0) and draft children belong
+            # to a live draft tree; preemption rolls the tree back first,
+            # so they must not disqualify the victim (the estimate stays
+            # conservative: draft pages themselves are not counted)
+            others = [r for r in node.requests if r != rid and r >= 0]
+            kids = {c for c in set(node.children) - freeable
+                    if not self.forest.nodes[c].meta.get("draft")}
             if others or kids or node.meta.get("pins", 0) > 0:
                 continue
             freeable.add(node.id)
@@ -827,7 +891,9 @@ class DecodeEngine:
         # _cache_size is a private jax API (stable across the pinned
         # 0.4.x line); degrade to 0 rather than crash stats printing if
         # a future jax renames it
-        size = getattr(self._step_fn, "_cache_size", None)
+        fn = self._step_fn if self._step_fn is not None \
+            else self._spec_step_fn
+        size = getattr(fn, "_cache_size", None)
         return int(size()) if callable(size) else 0
 
     def _rebuild_plans(self) -> None:
@@ -873,7 +939,8 @@ class DecodeEngine:
         running request."""
         snap = {k: self.stats[k]
                 for k in ("admitted", "preempted", "reclaimed",
-                          "prefill_tokens", "recompute_tokens")}
+                          "prefill_tokens", "recompute_tokens",
+                          "spec_proposed", "spec_accepted")}
         self._admit_phase()
         self._decode_timing = {}
         out = self._decode_phase()
@@ -888,6 +955,11 @@ class DecodeEngine:
                                - snap["prefill_tokens"]),
             "recompute_tokens": (self.stats["recompute_tokens"]
                                  - snap["recompute_tokens"]),
+            **({"spec_proposed": (self.stats["spec_proposed"]
+                                  - snap["spec_proposed"]),
+                "spec_accepted": (self.stats["spec_accepted"]
+                                  - snap["spec_accepted"])}
+               if self.spec is not None else {}),
             "waiting": len(self.admission),
             "prefilling": len(self._prefilling),
             "running": len(self._active_rows()),
@@ -897,9 +969,26 @@ class DecodeEngine:
         return out
 
     def _decode_phase(self) -> Dict[int, Optional[int]]:
+        if self.spec is not None:
+            return self._decode_phase_spec()
         if self.fused:
             return self._decode_phase_fused()
         return self._decode_phase_eager()
+
+    def _grow_leaf_tail(self, r: int):
+        """Ensure the request's leaf has a page slot for its newest
+        token, preempting under pressure (``exclude={r}``); returns the
+        leaf.  Shared by the normal append path and the speculative
+        commit so their growth/eviction behaviour can never diverge."""
+        leaf = self.forest.nodes[self.forest.leaf_of[r]]
+        if -(-leaf.length // self.page_size) > len(leaf.page_ids):
+            got = self._alloc_pages(1, exclude={r}, hint=leaf.id)
+            if got is None:
+                raise MemoryError(
+                    f"KV pool exhausted growing request {r}: nothing "
+                    f"left to evict (pool smaller than the working set)")
+            leaf.page_ids += got
+        return leaf
 
     def _append_pending(self, rows0: List[int]) -> None:
         """Append each running request's pending token to its leaf and
@@ -919,16 +1008,9 @@ class DecodeEngine:
                 req.generated.append(_PLACEHOLDER)
             else:
                 self.forest.append_token(r, req.pending)
-                leaf = self.forest.nodes[self.forest.leaf_of[r]]
                 req.generated.append(req.pending)
             req.pending = None
-            if -(-leaf.length // self.page_size) > len(leaf.page_ids):
-                got = self._alloc_pages(1, exclude={r}, hint=leaf.id)
-                if got is None:
-                    raise MemoryError(
-                        f"KV pool exhausted growing request {r}: nothing "
-                        f"left to evict (pool smaller than the working set)")
-                leaf.page_ids += got
+            self._grow_leaf_tail(r)
 
     def _decode_phase_eager(self) -> Dict[int, int]:
         cfg = self.cfg
@@ -1273,6 +1355,272 @@ class DecodeEngine:
             conv = jax.device_put(conv, self._replicated_sharding)
             ssm = jax.device_put(ssm, self._replicated_sharding)
         self._mamba_carry = (conv, ssm)
+
+    # ------------------------------------------------------------------ #
+    # speculative tree-decoding phase (serving/speculation.py, DESIGN §10):
+    # draft-propose -> tree-verify (one multi-query dispatch) ->
+    # accept/commit (KV moves from draft pages to the leaf tail) ->
+    # rollback (draft pages released)
+    # ------------------------------------------------------------------ #
+    def _rollback_drafts(self, rid: int) -> None:
+        """Release a request's live draft tree: detach the virtual
+        branch-head queries, prune the draft nodes leaf-first, and
+        return their pages to the allocator.  Idempotent no-op when the
+        request holds no drafts (the common non-speculative case)."""
+        st = self._drafts.pop(rid, None)
+        if st is None:
+            return
+        for virt in st.virts:
+            if virt in self.forest.leaf_of:
+                self.forest.detach_request(virt)
+        for nid in reversed(st.nodes):      # children before parents
+            if nid not in self.forest.nodes:
+                continue
+            pages = self.forest.prune_leaf(nid)
+            if pages:
+                self.pool.allocator.release(pages)
+
+    def _grow_drafts(self, rows: List[int]) -> None:
+        """Propose and materialise each running request's draft tree.
+
+        Draft pages are allocated best-effort: speculation never evicts
+        to make room (a wrong guess would have paid an eviction for
+        nothing), it just drafts fewer nodes — committed-token progress
+        is unaffected because verification degenerates to normal decode.
+        """
+        reserve = self.policy.reserve_pages
+        for r in rows:
+            req = self.requests[r]
+            room = req.max_new - len(req.generated)
+            if room <= 0:        # only the done-transition dispatch left
+                continue
+            branches = self.proposer.propose(req.seq, max_tokens=room)
+            if not branches:
+                continue
+            leaf_id = self.forest.leaf_of[r]
+            st = spec_mod.DraftState(r)
+            stalled = False
+            for chain in branches:
+                parent = leaf_id
+                for tok in chain:
+                    if self.pool.num_free - reserve < 1:
+                        stalled = True
+                        break
+                    node = self.forest.add_draft(parent, int(tok))
+                    node.page_ids = self.pool.allocator.alloc(
+                        1, hint=node.id)
+                    virt = self._next_virt
+                    self._next_virt -= 1
+                    self.forest.attach_request(virt, node.id)
+                    st.nodes.append(node.id)
+                    st.virts.append(virt)
+                    parent = node.id
+                if stalled:
+                    break
+            if stalled:
+                self.stats["spec_draft_stalls"] += 1
+            if st.nodes:
+                self._drafts[r] = st
+                self.stats["spec_proposed"] += len(st.nodes)
+
+    def _spec_layout(self, rows: List[int]):
+        """Stack the verification queries: per request its committed-tail
+        base query (the normal decode position) then one query per draft
+        node, each with its token, absolute position, and the KV slot
+        the dispatch writes that token's K/V into."""
+        ps = self.page_size
+        tokens: List[int] = []
+        q_pos: List[int] = []
+        w_page: List[int] = []
+        w_off: List[int] = []
+        req_rows: Dict[int, int] = {}
+        head_rows: Dict[int, Dict[int, int]] = {}
+        for r in rows:
+            req = self.requests[r]
+            leaf = self.forest.nodes[self.forest.leaf_of[r]]
+            tp = (leaf.length - 1) // ps
+            head_rows[r] = {leaf.id: len(tokens)}
+            req_rows[r] = len(tokens)
+            tokens.append(req.generated[-1])
+            q_pos.append(leaf.end_pos - 1)
+            w_page.append(leaf.page_ids[tp])
+            w_off.append((leaf.length - 1) % ps)
+            st = self._drafts.get(r)
+            if st is None:
+                continue
+            for nid, virt in zip(st.nodes, st.virts):
+                node = self.forest.nodes[nid]
+                head_rows[r][nid] = len(tokens)
+                req_rows[virt] = len(tokens)
+                tokens.append(int(node.tokens[0]))
+                q_pos.append(node.end_pos - 1)
+                w_page.append(node.page_ids[0])
+                w_off.append(0)
+        return tokens, q_pos, w_page, w_off, req_rows, head_rows
+
+    def _decode_phase_spec(self) -> Dict[int, Optional[int]]:
+        rows0 = self._active_rows()
+        if not rows0:
+            return {}
+        t0 = time.perf_counter()
+        self._append_pending(rows0)        # host ints: spec never defers
+        rows = self._active_rows()
+        if not rows:
+            return {}
+        self._grow_drafts(rows)
+        tokens, q_pos, w_page, w_off, req_rows, head_rows = \
+            self._spec_layout(rows)
+        tp0 = time.perf_counter()
+        plans = {}
+        for w in self._windows():
+            p = plan_mod.build_verify_plan(
+                self.forest, self.cost_model, req_rows, self.num_lanes,
+                self.max_q, self.max_kv_per_task, window=w,
+                kind=self._backend.plan_kind)
+            plans[w] = p
+        self.stats["replans"] += 1
+        self.stats["plan_time"] += time.perf_counter() - tp0
+        t_d0 = time.perf_counter()
+        if self._spec_step_fn is not None:
+            toks = self._spec_verify_fused(tokens, q_pos, w_page, w_off,
+                                           plans)
+        else:
+            toks = self._spec_verify_eager(tokens, q_pos, w_page, w_off,
+                                           plans)
+        t_d1 = time.perf_counter()
+        out = self._spec_commit(rows, toks, head_rows)
+        self.stats["steps"] += 1
+        self.stats["spec_steps"] += 1
+        self._decode_timing = {"dispatch_time": t_d1 - t_d0,
+                               "compute_time": time.perf_counter() - t_d1}
+        self.stats["decode_dispatch_time"] += t_d1 - t_d0
+        self.stats["decode_time"] += time.perf_counter() - t0
+        return out
+
+    def _spec_verify_eager(self, tokens, q_pos, w_page, w_off,
+                           plans) -> np.ndarray:
+        """Eager multi-query verification: per-layer loop, the backend's
+        ``partials`` over the verify plan (which covers the whole forest,
+        so no tail/POR merge), greedy argmax on the host."""
+        cfg = self.cfg
+        B = len(tokens)
+        qp = jnp.asarray(np.asarray(q_pos, np.int32))
+        pages = np.asarray(w_page)
+        offs = np.asarray(w_off)
+        prepared = {w: self._backend.prepare(p) for w, p in plans.items()}
+        x = T._embed(self.params, cfg, jnp.asarray(tokens)[None].T,
+                     qp[:, None])                            # (B,1,d)
+        for j, (kind, p) in enumerate(self.layers):
+            h = L.apply_norm(p["ln"], x, cfg)
+            if kind.mixer in ("attn", "attn_local"):
+                la = self.attn_layer_idx[j]
+                window = (cfg.sliding_window if kind.mixer == "attn_local"
+                          else 0)
+                q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
+                                                 qp[:, None])
+                self.pool.write_tokens(la, pages, offs,
+                                       k_new[:, 0], v_new[:, 0])
+                k_pool, v_pool = self.pool.layer_pools(la)
+                o, _, _ = self._backend.partials(
+                    q[:, 0], k_pool, v_pool, plans[window],
+                    prepared[window], window=window)
+                y = L.dense(p["attn"]["wo"],
+                            o.astype(q.dtype).reshape(
+                                B, 1, cfg.num_heads * cfg.head_dim))
+                x = x + y
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
+        logits = T._unembed(self.params, cfg, x)[:, 0]       # (B, V)
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def _spec_verify_fused(self, tokens, q_pos, w_page, w_off,
+                           plans) -> np.ndarray:
+        """Fused verification: ONE jitted, donated, bucketed dispatch
+        scores every branch head (serving/step_fn.make_spec_step_fn);
+        the host syncs once per verify step for the acceptance walk."""
+        B = len(tokens)
+        bucket = plan_mod.bucket_pow2(B)
+        prepared = []
+        sig: List = [("spec", bucket)]
+        for w in self._windows():
+            p = plan_mod.bucket_plan(plans[w], bucket)
+            pr = self._backend.prepare(p)
+            prepared.append(pr)
+            sig.append((w,) + tuple(tuple(a.shape)
+                                    for a in jax.tree.leaves(pr)))
+        self.bucket_signatures.add(tuple(sig))
+        tok = np.zeros(bucket, np.int32)
+        tok[:B] = tokens
+        qp = np.full(bucket, -1, np.int32)
+        qp[:B] = q_pos
+        wp = np.full(bucket, self.pool.trash_page, np.int32)
+        wp[:B] = w_page
+        wo = np.zeros(bucket, np.int32)
+        wo[:B] = w_off
+        state = step_fn_mod.SpecState(self.pool.k, self.pool.v)
+        toks_dev, state = self._spec_step_fn(
+            self.params, state, jnp.asarray(tok), jnp.asarray(qp),
+            jnp.asarray(wp), jnp.asarray(wo), tuple(prepared))
+        self.pool.k, self.pool.v = state.pool_k, state.pool_v
+        self.stats["fused_calls"] += 1
+        return np.asarray(toks_dev)[:B]
+
+    def _spec_commit(self, rows: List[int], toks: np.ndarray,
+                     head_rows) -> Dict[int, Optional[int]]:
+        """Greedy accept/commit/rollback for every request.
+
+        Per request: walk the scored draft tree (``speculation.
+        accept_walk``), roll the whole tree back (freeing its pages),
+        then append the accepted tokens to the committed leaf — moving
+        each one's KV from its draft page to the leaf's tail slot in a
+        single aliasing-safe ``copy_slots`` gather/scatter — and carry
+        the correction/bonus token as the next ``pending``.  The
+        committed forest layout after a speculative step is exactly
+        what non-speculative decode would have produced, so plans,
+        eviction, and the differential harness see nothing new.
+        """
+        ps = self.page_size
+        out: Dict[int, Optional[int]] = {}
+        for r in rows:
+            req = self.requests[r]
+            if req.state != RUNNING:   # preempted committing earlier rows
+                continue
+            leaf_id = self.forest.leaf_of[r]
+            rowmap = head_rows[r]
+            room = req.max_new - len(req.generated)
+            accepted, final_tok = spec_mod.accept_walk(
+                self.forest, leaf_id,
+                lambda nid: toks[rowmap[nid]], room)
+            # source KV slots + token values, recorded before rollback
+            moves = [(self.forest.nodes[nid].page_ids[0],
+                      int(self.forest.nodes[nid].tokens[0]))
+                     for nid in accepted]
+            self._rollback_drafts(r)
+            copies = []
+            for src_page, tok in moves:
+                self.forest.append_token(r, tok)
+                req.generated.append(tok)
+                leaf = self._grow_leaf_tail(r)
+                # exclude={r} forbids self-preemption, so r must still be
+                # running; a silent skip here would leave the appended
+                # tokens without their KV copy
+                assert req.state == RUNNING, (r, req.state)
+                tp = (leaf.length - 1) // ps
+                copies.append((src_page, 0, leaf.page_ids[tp],
+                               (leaf.length - 1) % ps))
+            if copies:
+                src_p, src_o, dst_p, dst_o = map(np.asarray, zip(*copies))
+                self.pool.copy_slots(src_p, src_o, dst_p, dst_o)
+                self.stats["spec_accepted"] += len(copies)
+            req.computed_hwm = max(req.computed_hwm,
+                                   self.forest.context_len(r))
+            if len(req.generated) >= req.max_new:
+                req.state = DONE
+                req.pending = None
+                out[r] = req.generated[-1]
+            else:
+                req.pending = final_tok
+                out[r] = final_tok
+        return out
 
     # ------------------------------------------------------------------ #
     def run(self, max_steps: int = 64) -> Dict[int, List[int]]:

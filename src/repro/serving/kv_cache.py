@@ -124,6 +124,23 @@ class PagedKVPool:
         self.k = self.k.at[li, pg, of].set(k_new.astype(self.k.dtype))
         self.v = self.v.at[li, pg, of].set(v_new.astype(self.v.dtype))
 
+    def copy_slots(self, src_pages: np.ndarray, src_offs: np.ndarray,
+                   dst_pages: np.ndarray, dst_offs: np.ndarray) -> None:
+        """Copy token slots across pages, all layers at once.
+
+        The speculative engine's commit path: an accepted draft token's
+        KV was computed into its draft node's page during verification;
+        committing moves it to the request's leaf tail slot so the draft
+        page can be released and the committed layout stays identical to
+        what non-speculative decode would have produced.
+        """
+        sp = jnp.asarray(src_pages, jnp.int32)
+        so = jnp.asarray(src_offs, jnp.int32)
+        dp = jnp.asarray(dst_pages, jnp.int32)
+        do = jnp.asarray(dst_offs, jnp.int32)
+        self.k = self.k.at[:, dp, do].set(self.k[:, sp, so])
+        self.v = self.v.at[:, dp, do].set(self.v[:, sp, so])
+
     def gather_context(self, layer: int, pages: List[int], length: int,
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Dense (length, n_kv, hd) view of a page run (prefill reuse)."""

@@ -87,6 +87,77 @@ class StepState(NamedTuple):
     ssm: jnp.ndarray         # (n_mamba, B, H, P_h, S) f32 SSM recurrent state
 
 
+class SpecState(NamedTuple):
+    """Donated pool state threaded through fused verification dispatches
+    (speculative mode is attention-only, so no SSM state rides along)."""
+
+    pool_k: jnp.ndarray      # (n_attn, P+1, page, n_kv, hd)
+    pool_v: jnp.ndarray
+
+
+def make_spec_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...]):
+    """Build the fused speculative *verification* dispatch (DESIGN §10).
+
+    Returns a jitted callable
+
+        ``fn(params, state, tokens, q_pos, write_page, write_off,
+        prepared) -> (greedy_tokens, state')``
+
+    scoring a whole batch of verification queries — every request's
+    committed-tail base query plus one query per draft-tree node — in
+    ONE device dispatch.  Per attention layer it projects q/k/v for all
+    rows, scatters the new K/V into each row's ``(write_page,
+    write_off)`` slot (draft nodes own their page's slot 0; padded
+    bucket rows hit the pool's trash page), then runs the backend's
+    ``partials_arrays_fn`` over the *verify plan* — which covers the
+    entire forest including partial tail pages and draft nodes, so no
+    tail/POR split is needed and the partials' ``o`` is already the
+    full softmax output.  Greedy argmax replaces sampling (speculative
+    mode is greedy-only; acceptance happens on the host).
+
+    Shapes bucket exactly like the regular fused step: the row axis to
+    ``bucket_pow2`` and the plan through ``core.plan.bucket_plan``, so
+    draft trees of varying shape reuse the compiled program.
+    """
+    _silence_donation_warning()
+    win_slot = {w: i for i, w in enumerate(windows)}
+
+    def step(params, state: SpecState, tokens: jnp.ndarray,
+             q_pos: jnp.ndarray, write_page: jnp.ndarray,
+             write_off: jnp.ndarray, prepared: Tuple[Any, ...]):
+        B = tokens.shape[0]
+        x = T._embed(params, cfg, tokens[:, None], q_pos[:, None])
+
+        def body(c, kind, p, la, lm):
+            x, pool_k, pool_v = c
+            h = L.apply_norm(p["ln"], x, cfg)
+            if kind.mixer in ("attn", "attn_local"):
+                w = cfg.sliding_window if kind.mixer == "attn_local" else 0
+                q, k_new, v_new = L.attn_project(p["attn"], cfg, h,
+                                                 q_pos[:, None])
+                pool_k = pool_k.at[la, write_page, write_off].set(
+                    k_new[:, 0].astype(pool_k.dtype))
+                pool_v = pool_v.at[la, write_page, write_off].set(
+                    v_new[:, 0].astype(pool_v.dtype))
+                o, _, _ = backend.partials_arrays_fn(
+                    q[:, 0], pool_k[la], pool_v[la],
+                    prepared[win_slot[w]], num_queries=B, window=w)
+                y = L.dense(p["attn"]["wo"],
+                            o.astype(q.dtype).reshape(
+                                B, 1, cfg.num_heads * cfg.head_dim))
+                x = x + y
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
+            return (x, pool_k, pool_v)
+
+        x, pool_k, pool_v = T.scan_layer_stack(
+            cfg, params, body, (x, state.pool_k, state.pool_v))
+        logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        return toks, SpecState(pool_k, pool_v)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
 def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
                  temperature: float):
     """Build the fused decode step for one engine configuration.

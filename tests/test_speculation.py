@@ -1,0 +1,349 @@
+"""Speculative tree-decoding tests (DESIGN.md §10).
+
+Covers the whole draft-propose / tree-verify / accept-rollback loop:
+
+* proposer determinism + draft-tree bounds;
+* the public forest draft API (``add_node`` / ``add_draft`` /
+  ``detach_request`` / ``prune_leaf``);
+* the multi-query verify plan vs a per-branch dense oracle (the
+  ``examples/tree_speculation.py`` property, kept under pytest);
+* end-to-end differential: with the deterministic proposer,
+  speculative greedy streams are byte-identical to non-speculative
+  decode for every registered backend, eager AND fused;
+* acceptance quality: mean accepted length > 1 and dispatch count
+  strictly below one-per-token on a repetitive workload;
+* allocator/forest leak checks after draft rollback, after evicting a
+  request mid-speculation, and after releasing mid-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import plan as plan_mod, tree as tree_mod
+from repro.core.cost_model import CostModel
+from repro.kernels import ops, ref, registry
+from repro.models import transformer as T
+from repro.serving.engine import DecodeEngine, RUNNING
+from repro.serving.speculation import NGramProposer, SpecConfig, accept_walk
+
+CFG = smoke_config("qwen2.5-14b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+PAGE = 8
+
+# repetitive workload: the self-drafting n-gram proposer must get
+# traction (random-init models settle into repetitive greedy streams,
+# which the proposer then predicts)
+PATTERN = [5, 7, 11, 13]
+REP_PROMPT = (PATTERN * 6)[:24]
+REP_MAX_NEW = 12
+
+
+def run_engine(backend="codec-xla", *, spec=None, fused=False,
+               prompts=(REP_PROMPT,), max_new=REP_MAX_NEW,
+               num_pages=256, prefill_chunk=None, release_at=None):
+    """Run prompts to completion; returns (streams, stats, engine-less).
+
+    Always asserts the allocator/forest are leak-free after releasing
+    every request (the §10 invariant: draft trees never outlive their
+    verify step)."""
+    eng = DecodeEngine(CFG, PARAMS, page_size=PAGE, num_pages=num_pages,
+                       backend=backend, max_q=8, temperature=0.0,
+                       fused=fused, speculative=spec,
+                       prefill_chunk=prefill_chunk)
+    rids = [eng.add_request(list(p), max_new=max_new) for p in prompts]
+    for step in range(200):
+        if release_at is not None and step == release_at and rids:
+            eng.release(rids[-1])      # drop one mid-run (mid-speculation)
+            rids = rids[:-1]
+        if not eng.has_work():
+            break
+        eng.step()
+    assert not eng.has_work(), "workload did not finish"
+    outs = [list(eng.requests[r].generated) for r in rids]
+    stats = dict(eng.stats)
+    assert not eng._drafts, "draft state leaked past a step"
+    for r in list(eng.requests):
+        eng.release(r)
+    assert eng.pool.num_free == eng.pool.num_pages, "leaked pages"
+    eng.pool.allocator.check()
+    assert set(eng.forest.nodes) == {0}, "leaked forest nodes"
+    return outs, stats
+
+
+_BASE = {}
+
+
+def baseline(prompts=(REP_PROMPT,), max_new=REP_MAX_NEW):
+    key = (tuple(map(tuple, prompts)), max_new)
+    if key not in _BASE:
+        _BASE[key] = run_engine("ref", prompts=prompts, max_new=max_new)[0]
+    return _BASE[key]
+
+
+# --------------------------------------------------------------------- #
+# proposer
+# --------------------------------------------------------------------- #
+def test_proposer_deterministic_and_bounded():
+    cfg = SpecConfig(depth=3, branch=2, max_nodes=5, ngram=2)
+    prop = NGramProposer(cfg)
+    seq = [1, 2, 3, 9, 1, 2, 3, 4, 1, 2, 3]
+    a = prop.propose(seq)
+    assert a == prop.propose(seq), "must be deterministic"
+    assert a, "repetitive sequence must draft"
+    assert sum(len(c) for c in a) <= cfg.max_nodes
+    assert len(a) <= cfg.branch
+    assert all(len(c) <= cfg.depth for c in a)
+    firsts = [c[0] for c in a]
+    assert len(firsts) == len(set(firsts)), "branches fork on first token"
+    # most recent match wins: after [1,2,3] the recent continuation is 4
+    assert a[0][0] == 4
+    # budget cap trims totals
+    capped = prop.propose(seq, max_tokens=2)
+    assert sum(len(c) for c in capped) <= 2
+
+
+def test_proposer_no_match():
+    prop = NGramProposer(SpecConfig())
+    assert prop.propose([1, 2, 3, 4, 5]) == []   # all tokens distinct
+    assert prop.propose([7]) == []               # too short
+    assert prop.propose([]) == []
+
+
+# --------------------------------------------------------------------- #
+# forest draft API
+# --------------------------------------------------------------------- #
+def test_tree_draft_grow_prune_roundtrip():
+    f = tree_mod.PrefixForest(4)
+    trunk = f.add_node(tree_mod.ROOT_ID, 8)
+    leaf = f.add_node(trunk.id, 4, np.arange(4, dtype=np.int32))
+    f.attach_request(0, leaf.id)
+    d1 = f.add_draft(leaf.id, 42)
+    d2 = f.add_draft(d1.id, 43)
+    sib = f.add_draft(leaf.id, 44)           # sibling branch
+    for virt, node in [(-2, d1), (-3, d2), (-4, sib)]:
+        f.attach_request(virt, node.id)
+    f.validate()
+    assert d1.meta["draft"] and d1.length == 1
+    assert d1.start_pos == leaf.end_pos and d2.start_pos == d1.end_pos
+    assert f.context_len(-3) == leaf.end_pos + 2
+    # rollback: detach virtuals, prune leaf-first
+    for virt in (-2, -3, -4):
+        f.detach_request(virt)
+    for node in (d2, sib, d1):
+        node.page_ids = [7]
+        assert f.prune_leaf(node.id) == [7]
+    f.validate()
+    assert set(f.nodes) == {0, trunk.id, leaf.id}
+    # prune refuses non-leaves / attached nodes
+    with pytest.raises(AssertionError):
+        f.prune_leaf(trunk.id)               # has a child
+    with pytest.raises(AssertionError):
+        f.prune_leaf(leaf.id)                # request attached
+
+
+def test_accept_walk_greedy_rule():
+    f = tree_mod.PrefixForest(4)
+    leaf = f.add_node(tree_mod.ROOT_ID, 4)
+    d1 = f.add_draft(leaf.id, 10)
+    d2 = f.add_draft(d1.id, 11)
+    wrong = f.add_draft(leaf.id, 99)
+    argmax = {leaf.id: 10, d1.id: 11, d2.id: 12, wrong.id: 0}
+    acc, fin = accept_walk(f, leaf.id, argmax.__getitem__, room=8)
+    assert acc == [d1.id, d2.id] and fin == 12      # full match + bonus
+    argmax[d1.id] = 77                              # mismatch at depth 1
+    acc, fin = accept_walk(f, leaf.id, argmax.__getitem__, room=8)
+    assert acc == [d1.id] and fin == 77             # correction token
+    acc, fin = accept_walk(f, leaf.id, argmax.__getitem__, room=0)
+    assert acc == [] and fin == 10                  # room cap
+
+
+# --------------------------------------------------------------------- #
+# verify plan vs per-branch dense oracle (from examples/tree_speculation)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["codec-xla", "hydragen", "flash"])
+def test_verify_plan_branch_heads_vs_oracle(backend):
+    page, trunk_len, depth, arity = 8, 4 * 8, 3, 2
+    h_q, h_kv, d = 4, 2, 16
+    forest = tree_mod.PrefixForest(page)
+    trunk = forest.add_node(tree_mod.ROOT_ID, trunk_len)
+    frontier = [trunk]
+    for _ in range(depth):
+        frontier = [forest.add_node(n.id, page)
+                    for n in frontier for _ in range(arity)]
+    for rid, leaf in enumerate(frontier):
+        forest.attach_request(rid, leaf.id)
+    forest.validate()
+    B = len(frontier)
+    pool_pages = plan_mod.assign_dense_pages(forest)
+    cm = CostModel(h_q, h_kv, d, page_size=page)
+    be = registry.get(backend)
+    plan = plan_mod.build_verify_plan(forest, cm, {r: r for r in range(B)},
+                                      num_lanes=2, max_q=B,
+                                      kind=be.plan_kind)
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, h_q, d))
+    k_pool = jax.random.normal(kk, (pool_pages, page, h_kv, d))
+    v_pool = jax.random.normal(kv, (pool_pages, page, h_kv, d))
+    out = be(q, k_pool, v_pool, plan)
+    for rid in range(B):
+        ks, vs = [], []
+        for node in forest.path(rid):
+            for j, pg in enumerate(node.page_ids):
+                take = min(page, node.length - j * page)
+                ks.append(k_pool[pg][:take])
+                vs.append(v_pool[pg][:take])
+        kd, vd = jnp.concatenate(ks, 0), jnp.concatenate(vs, 0)
+        o_ref, _, _ = ref.pac_ref(q[rid][None], kd, vd)
+        assert float(jnp.abs(out[rid] - o_ref[0]).max()) < 1e-5, rid
+
+
+# --------------------------------------------------------------------- #
+# end-to-end differential: spec streams == plain greedy, every backend
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("backend", registry.names())
+def test_spec_stream_identical(backend, fused):
+    got, stats = run_engine(backend, spec=SpecConfig(), fused=fused)
+    assert got == baseline(), (backend, fused)
+    assert stats["spec_steps"] >= 1
+
+
+def test_spec_acceptance_and_dispatch_count():
+    """The §10 acceptance criteria on a repetitive workload: drafts are
+    accepted (mean accepted length > 1 token/dispatch) and the engine
+    dispatches strictly fewer times than it commits tokens."""
+    got, stats = run_engine("codec-xla", spec=SpecConfig())
+    total_tokens = sum(len(o) for o in got)
+    dispatches = stats["spec_steps"]
+    assert stats["spec_accepted"] >= 1, stats
+    assert dispatches < total_tokens, (dispatches, total_tokens)
+    # mean committed tokens per verify dispatch strictly above one
+    assert total_tokens / dispatches > 1.0
+    assert stats["spec_proposed"] >= stats["spec_accepted"]
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_spec_sliding_window_arch(fused):
+    """Sliding-window layers route through per-window verify plans
+    (window pruning in ``build_verify_plan``, ``win_slot`` routing in
+    the fused dispatch); streams must still match plain greedy."""
+    cfg = smoke_config("gemma3-1b")         # attn_local + attn hybrid
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def serve(spec):
+        eng = DecodeEngine(cfg, params, page_size=PAGE, num_pages=256,
+                           backend="codec-xla", max_q=8, temperature=0.0,
+                           fused=fused, speculative=spec)
+        r = eng.add_request(list(REP_PROMPT), max_new=REP_MAX_NEW)
+        eng.run(96)
+        out = list(eng.requests[r].generated)
+        stats = dict(eng.stats)
+        for q in list(eng.requests):
+            eng.release(q)
+        assert eng.pool.num_free == eng.pool.num_pages
+        return out, stats
+
+    base, _ = serve(None)
+    got, stats = serve(SpecConfig())
+    assert got == base
+    assert stats["spec_steps"] < len(got), "window arch must accept drafts"
+
+
+def test_spec_multi_request_shared_prefix():
+    """Branch-head lanes of several requests share the trunk read in one
+    verify plan; streams still match the non-speculative oracle."""
+    rng = np.random.default_rng(0)
+    doc = (list(rng.integers(0, CFG.vocab_size, 8)) * 3)[:24]
+    prompts = [doc + list(rng.integers(0, CFG.vocab_size, 2))
+               for _ in range(3)]
+    base = baseline(prompts=tuple(map(tuple, prompts)), max_new=8)
+    for fused in (False, True):
+        got, _ = run_engine("codec-xla", spec=SpecConfig(), fused=fused,
+                            prompts=prompts, max_new=8)
+        assert got == base, fused
+
+
+# --------------------------------------------------------------------- #
+# memory pressure + rollback
+# --------------------------------------------------------------------- #
+def test_spec_under_pressure_with_eviction():
+    """Undersized pool + chunked prefill under speculative mode: the
+    engine preempts-and-recomputes and still matches the unconstrained
+    oracle; every draft page is back in the free list at the end."""
+    doc = (PATTERN * 12)[:48]
+    prompts = [doc + [100 + 3 * i + j for j in range(3)]
+               for i in range(4)]
+    base = baseline(prompts=tuple(map(tuple, prompts)), max_new=12)
+    # max_nodes=1 keeps the draft admission reserve small enough that
+    # all four requests run concurrently, so decode growth (not just
+    # draft pressure) exhausts the 9-page pool and forces preemption
+    got, stats = run_engine("codec-xla", spec=SpecConfig(max_nodes=1),
+                            prompts=prompts, max_new=12,
+                            num_pages=9, prefill_chunk=8)
+    assert got == base
+    assert stats["preempted"] >= 1, stats
+    assert stats["spec_accepted"] >= 1, stats
+
+
+def test_preempt_mid_speculation_releases_drafts():
+    """Directly evict a request while its draft tree is live: the draft
+    nodes, virtual queries, and pages must all be released."""
+    eng = DecodeEngine(CFG, PARAMS, page_size=PAGE, num_pages=64,
+                       backend="codec-xla", max_q=8, temperature=0.0,
+                       speculative=SpecConfig())
+    r = eng.add_request(list(REP_PROMPT), max_new=12)
+    for _ in range(6):
+        eng.step()
+    rows = [q for q in eng.requests if eng.requests[q].state == RUNNING]
+    assert rows == [r]
+    eng._grow_drafts(rows)
+    assert r in eng._drafts and eng._drafts[r].nodes, \
+        "repetitive stream must draft"
+    n_draft_pages = len(eng._drafts[r].nodes)
+    used_before = eng.pool.allocator.num_used
+    eng._preempt(r)
+    assert r not in eng._drafts
+    assert all(not n.meta.get("draft") for n in eng.forest.nodes.values())
+    assert eng.pool.allocator.num_used <= used_before - n_draft_pages
+    eng.pool.allocator.check()
+    # the preempted request resumes and finishes with the same stream
+    eng.run(64)
+    assert list(eng.requests[r].generated) == baseline()[0]
+    for q in list(eng.requests):
+        eng.release(q)
+    assert eng.pool.num_free == eng.pool.num_pages
+    assert set(eng.forest.nodes) == {0}
+
+
+def test_release_mid_run_leak_free():
+    prompts = [REP_PROMPT, list(REP_PROMPT[:16])]
+    outs, _ = run_engine("codec-xla", spec=SpecConfig(), prompts=prompts,
+                         release_at=4)
+    assert len(outs) == 1        # released request dropped cleanly
+
+
+# --------------------------------------------------------------------- #
+# gates
+# --------------------------------------------------------------------- #
+def test_spec_rejects_unsupported_modes():
+    with pytest.raises(ValueError, match="greedy-only"):
+        DecodeEngine(CFG, PARAMS, page_size=PAGE, backend="codec-xla",
+                     temperature=0.7, speculative=True)
+    mcfg = smoke_config("mamba2-2.7b")
+    mparams = T.init_params(mcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="Mamba"):
+        DecodeEngine(mcfg, mparams, page_size=PAGE, backend="codec-xla",
+                     speculative=True)
+
+
+def test_spec_max_new_exact_cap():
+    """Accepted drafts never overshoot max_new (commit truncates)."""
+    for max_new in (1, 2, 3):
+        base = baseline(max_new=max_new)
+        got, _ = run_engine("codec-xla", spec=SpecConfig(),
+                            max_new=max_new)
+        assert got == base, max_new
+        assert all(len(o) == max_new for o in got)

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs lint: intra-repo links, heading anchors, DESIGN § references.
+
+Checks every tracked markdown file (README.md, DESIGN.md, ROADMAP.md,
+docs/*.md) for:
+
+* **relative links** ``[text](path)`` — the target file must exist in
+  the repo (external http(s)/mailto links are skipped);
+* **anchor links** ``[text](path#anchor)`` / ``[text](#anchor)`` — the
+  anchor must match a heading in the target file under GitHub's
+  slugification rules;
+* **section references** — every textual ``DESIGN.md §N`` mention must
+  have a matching ``## §N `` heading in DESIGN.md, so prose references
+  can't rot when sections are renumbered;
+* **path references** — every backtick-quoted repo path that looks like
+  a file (`src/...`, `tests/...`, `docs/...`, `examples/...`,
+  `benchmarks/...`, `tools/...`) must exist.
+
+    python tools/check_docs.py        # exit 1 on any broken reference
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted(
+    [p for p in ROOT.glob("*.md")] + [p for p in ROOT.glob("docs/*.md")])
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+PATH_RE = re.compile(
+    r"`((?:src|tests|docs|examples|benchmarks|tools)/[A-Za-z0-9_./-]+"
+    r"\.(?:py|md|json|yml))`")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)      # drop punctuation (keeps _-)
+    return s.replace(" ", "-")
+
+
+def headings(path: pathlib.Path) -> set:
+    out = set()
+    for line in path.read_text().splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            out.add(github_slug(m.group(1)))
+    return out
+
+
+def main() -> int:
+    errors = []
+    design_sections = {
+        m.group(1)
+        for m in re.finditer(r"^##\s+§(\d+)", (ROOT / "DESIGN.md").read_text(),
+                             re.MULTILINE)}
+    slug_cache = {}
+    for doc in DOCS:
+        text = doc.read_text()
+        # markdown links
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            tpath = (doc.parent / path_part).resolve() if path_part else doc
+            if not tpath.exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+                continue
+            if anchor and tpath.suffix == ".md":
+                if tpath not in slug_cache:
+                    slug_cache[tpath] = headings(tpath)
+                if anchor not in slug_cache[tpath]:
+                    errors.append(
+                        f"{doc.relative_to(ROOT)}: missing anchor "
+                        f"#{anchor} in {tpath.relative_to(ROOT)}")
+        # textual DESIGN § references
+        for m in SECTION_RE.finditer(text):
+            if m.group(1) not in design_sections:
+                errors.append(f"{doc.relative_to(ROOT)}: reference to "
+                              f"DESIGN.md §{m.group(1)} but DESIGN.md has "
+                              f"no '## §{m.group(1)}' heading")
+        # backtick-quoted repo paths
+        for m in PATH_RE.finditer(text):
+            if not (ROOT / m.group(1)).exists():
+                errors.append(f"{doc.relative_to(ROOT)}: path reference "
+                              f"`{m.group(1)}` does not exist")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\n{len(errors)} broken doc reference(s)", file=sys.stderr)
+        return 1
+    print(f"docs OK: {len(DOCS)} files, {len(design_sections)} DESIGN "
+          f"sections")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
