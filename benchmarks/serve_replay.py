@@ -1,0 +1,193 @@
+"""Serving replay benchmark: request arrivals against the live engine.
+
+Replays a trace of requests — Poisson or scripted arrivals over a
+prompt mix that shares system prompts — through one persistent
+``DecodeEngine`` with the cross-request prefix cache enabled, and
+measures per-request TTFT (submit -> first streamed token) and TPOT
+(mean inter-token gap) via the streaming callbacks.
+
+Two passes run through the SAME engine: the cold pass starts from an
+empty cache, the warm pass re-uses the documents the cold pass left
+resident (new per-request tails, so only the shared prefixes can hit).
+``BENCH_serve.json`` records p50/p99 TTFT and TPOT for both passes plus
+the warm-pass cache counters, giving CI a cold-vs-warm baseline.
+
+Wall-clock caveat (see benchmarks/common.py): absolute latencies on
+this CPU container are not the deliverable; the cold/warm *ratio* and
+the hit-rate are the signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving.cache import CachePolicy
+from repro.serving.engine import DecodeEngine
+
+PRESETS = {
+    # CI-sized: two shared docs, six requests per pass, tiny tails.
+    "smoke": dict(arch="qwen2.5-14b", backend="codec-xla", page_size=16,
+                  num_pages=512, doc_len=64, num_docs=2, requests=6,
+                  max_new=4, arrivals="scripted", rate=2.0),
+    # Longer mix: three docs, Poisson arrivals, deeper generations.
+    "full": dict(arch="qwen2.5-14b", backend="codec-xla", page_size=16,
+                 num_pages=2048, doc_len=192, num_docs=3, requests=16,
+                 max_new=16, arrivals="poisson", rate=1.5),
+}
+
+
+def build_mix(args, rng, pass_no):
+    """Prompts over shared system prompts + per-request unique tails."""
+    docs = [list(range(1000 * (d + 1), 1000 * (d + 1) + args.doc_len))
+            for d in range(args.num_docs)]
+    prompts = []
+    for i in range(args.requests):
+        doc = docs[i % args.num_docs]
+        tail = [int(t) for t in
+                rng.integers(1, 900, size=4 + (i % 3))]
+        prompts.append(doc + tail)
+    return prompts
+
+
+def build_schedule(args, rng, prompts):
+    """Arrival step for each prompt.
+
+    * ``scripted``: a fixed staircase — one request per ``1/rate``
+      steps, deterministic and preset-reproducible.
+    * ``poisson``: exponential inter-arrival gaps at ``rate``
+      requests/step (classic open-loop replay).
+    """
+    n = len(prompts)
+    if args.arrivals == "scripted":
+        steps = [int(i / args.rate) for i in range(n)]
+    else:
+        gaps = rng.exponential(scale=1.0 / args.rate, size=n)
+        steps = np.floor(np.cumsum(gaps)).astype(int).tolist()
+    return list(zip(steps, prompts))
+
+
+def replay(eng, schedule, max_new, max_steps=100_000):
+    """Step-driven open-loop replay; returns per-request timing records."""
+    recs = []
+    pending = sorted(schedule, key=lambda x: x[0])
+    i, step = 0, 0
+    while i < len(pending) or eng.has_work():
+        while i < len(pending) and pending[i][0] <= step:
+            rec = {"submit": time.perf_counter(), "toks": []}
+
+            def cb(rid, tok, rec=rec):
+                now = time.perf_counter()
+                if not rec["toks"]:
+                    rec["first"] = now
+                rec["last"] = now
+                rec["toks"].append(tok)
+
+            eng.add_request(pending[i][1], max_new=max_new, on_token=cb)
+            recs.append(rec)
+            i += 1
+        eng.step()
+        step += 1
+        if step > max_steps:
+            raise RuntimeError("replay did not drain")
+    eng.flush_tokens()
+    eng._stream_ready()
+    return recs
+
+
+def summarize(recs, max_new):
+    ttft = np.asarray([(r["first"] - r["submit"]) * 1e3 for r in recs])
+    tpot = np.asarray([(r["last"] - r["first"]) / (len(r["toks"]) - 1)
+                       * 1e3 for r in recs if len(r["toks"]) > 1])
+    assert all(len(r["toks"]) == max_new for r in recs), \
+        "every request must stream its full generation"
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+    return {
+        "requests": len(recs),
+        "ttft_ms": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
+        "tpot_ms": {"p50": pct(tpot, 50), "p99": pct(tpot, 99)},
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    ap.add_argument("--arrivals", choices=("poisson", "scripted"))
+    ap.add_argument("--rate", type=float, help="arrivals per engine step")
+    ap.add_argument("--requests", type=int)
+    ap.add_argument("--doc-len", type=int)
+    ap.add_argument("--num-docs", type=int)
+    ap.add_argument("--max-new", type=int)
+    ap.add_argument("--backend")
+    ap.add_argument("--fused", action="store_true")
+    ap.add_argument("--cache-ttl", type=int, default=None)
+    ap.add_argument("--cache-pages", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    for k, v in PRESETS[args.preset].items():
+        if getattr(args, k, None) is None:
+            setattr(args, k, v)
+
+    cfg = smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+    policy = CachePolicy(ttl_steps=args.cache_ttl,
+                         max_pages=args.cache_pages)
+    eng = DecodeEngine(cfg, params, page_size=args.page_size,
+                       num_pages=args.num_pages, backend=args.backend,
+                       max_q=max(8, args.requests), temperature=0.0,
+                       fused=args.fused, cache=policy)
+
+    result = {"preset": args.preset, "arch": args.arch,
+              "backend": args.backend, "arrivals": args.arrivals,
+              "config": dict(page_size=args.page_size,
+                             num_pages=args.num_pages,
+                             doc_len=args.doc_len, num_docs=args.num_docs,
+                             requests=args.requests, max_new=args.max_new,
+                             rate=args.rate, seed=args.seed)}
+    for pass_no, name in enumerate(("cold", "warm")):
+        prompts = build_mix(args, rng, pass_no)
+        schedule = build_schedule(args, rng, prompts)
+        snap = dict(eng.cache.stats)
+        t0 = time.perf_counter()
+        recs = replay(eng, schedule, args.max_new)
+        wall = time.perf_counter() - t0
+        summ = summarize(recs, args.max_new)
+        summ["wall_s"] = wall
+        d = {k: eng.cache.stats[k] - snap[k] for k in snap}
+        summ["cache"] = {
+            "hits": d["hits"], "misses": d["misses"],
+            "hit_tokens": d["hit_tokens"],
+            "hit_rate": d["hits"] / max(d["hits"] + d["misses"], 1),
+            "evicted_nodes": d["evicted_nodes"],
+            "resident_pages": eng.cache.resident_pages(),
+        }
+        result[name] = summ
+        print(f"{name}: ttft p50 {summ['ttft_ms']['p50']:.1f} ms "
+              f"p99 {summ['ttft_ms']['p99']:.1f} ms | "
+              f"tpot p50 {summ['tpot_ms']['p50']:.1f} ms | "
+              f"hit rate {summ['cache']['hit_rate']:.0%} "
+              f"({d['hit_tokens']} cached tokens)")
+        for r in list(eng.requests):
+            eng.release(r)
+
+    result["ttft_p50_speedup"] = (result["cold"]["ttft_ms"]["p50"]
+                                  / max(result["warm"]["ttft_ms"]["p50"],
+                                        1e-9))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {args.out}: warm/cold ttft p50 "
+          f"{result['warm']['ttft_ms']['p50']:.1f}/"
+          f"{result['cold']['ttft_ms']['p50']:.1f} ms "
+          f"({result['ttft_p50_speedup']:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -115,6 +115,25 @@ class AdmissionPolicy:
         """Free-page watermark admission must stay above."""
         return self.reserve_pages + self.draft_reserve_pages * num_running
 
+    def min_working_pages(self, seq_len: int, page_size: int) -> int:
+        """Smallest page count that can ever make progress on a sequence.
+
+        Whole-prompt prefill (``prefill_chunk=None``) needs the full
+        sequence resident, so the working set is every page.  Chunked
+        prefill only needs one chunk plus the tail page it is growing
+        into — a prompt larger than the pool is still servable as long
+        as each chunk fits (earlier chunks' pages are reclaimable via
+        preempt-and-recompute).  Admission raises ``MemoryError`` only
+        when this floor exceeds the pool; anything above it just waits.
+        """
+        ps = max(int(page_size), 1)
+        total = -(-max(seq_len, 1) // ps)
+        pc = self.prefill_chunk
+        if pc is None:
+            return total
+        chunk = ps if pc == "auto" else int(pc)
+        return min(total, -(-max(min(seq_len, chunk), 1) // ps) + 1)
+
     def __post_init__(self):
         pc = self.prefill_chunk
         if isinstance(pc, str) and pc != "auto":

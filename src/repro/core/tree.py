@@ -57,6 +57,10 @@ class PrefixForest:
         self._next_id = 1
         # request id -> leaf node id
         self.leaf_of: Dict[int, int] = {}
+        # optional observer called as on_split(upper, lower) after a node
+        # split; the engine uses it to extend per-request pin bookkeeping
+        # over the new lower half
+        self.on_split = None
 
     # ------------------------------------------------------------------ #
     # construction
@@ -153,6 +157,10 @@ class PrefixForest:
             child = self.nodes[cid]
             if child.tokens is None or len(child.tokens) == 0:
                 continue
+            if child.meta.get("draft"):
+                # unverified speculative tokens may be rolled back after
+                # the verify step — never match new requests into them
+                continue
             if child.tokens[0] != remaining[0]:
                 continue
             m = (_common_prefix_len(child.tokens, remaining) // bs) * bs
@@ -238,10 +246,18 @@ class PrefixForest:
             node.meta["filled"] = min(filled, at)
         if "ssm" in node.meta:
             lower.meta["ssm"] = node.meta.pop("ssm")
+        # pins guard the whole pinned span: a waiting request that pinned
+        # this node counted *all* its pages toward its admission estimate,
+        # so both halves must stay protected (and LRU recency travels too)
+        for key in ("pins", "touch"):
+            if key in node.meta:
+                lower.meta[key] = node.meta[key]
         # fix leaf_of for requests whose leaf was the split node
         for rid, leaf in list(self.leaf_of.items()):
             if leaf == node.id:
                 self.leaf_of[rid] = lower.id
+        if self.on_split is not None:
+            self.on_split(node, lower)
 
     def append_token(self, request_id: int, token: Optional[int] = None) -> None:
         """Grow the request's private leaf by one generated token."""

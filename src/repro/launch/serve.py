@@ -81,10 +81,26 @@ def main() -> int:
                     help="placement quota: pages a node keeps on one "
                          "data shard before sequence-splitting to the "
                          "next (0 = split only when a shard fills)")
+    ap.add_argument("--cache", action="store_true",
+                    help="persistent cross-request prefix cache: finished "
+                         "requests detach but their prefix KV stays "
+                         "resident (serves a second wave over the same "
+                         "document to show warm-cache admission)")
+    ap.add_argument("--cache-ttl", type=int, default=None,
+                    help="evict cached nodes untouched for this many "
+                         "engine steps (implies --cache)")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="LRU cap on resident cached pages "
+                         "(implies --cache)")
+    ap.add_argument("--stream", action="store_true",
+                    help="register per-request streaming callbacks and "
+                         "report first-token latencies")
     ap.add_argument("--max-steps", type=int, default=0,
                     help="engine step budget (0 = max-new + slack)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.cache_ttl is not None or args.cache_pages is not None:
+        args.cache = True
 
     from repro.distributed.mesh import parse_mesh
     mesh_d, mesh_m = parse_mesh(args.mesh)
@@ -122,6 +138,12 @@ def main() -> int:
         spec = SpecConfig(depth=args.spec_depth, branch=args.spec_branch,
                           max_nodes=args.spec_nodes)
 
+    cache_policy = None
+    if args.cache:
+        from repro.serving.cache import CachePolicy
+        cache_policy = CachePolicy(ttl_steps=args.cache_ttl,
+                                   max_pages=args.cache_pages)
+
     def run(backend: str):
         eng = DecodeEngine(cfg, params, page_size=args.page_size,
                            num_pages=args.max_pages, backend=backend,
@@ -131,10 +153,16 @@ def main() -> int:
                            max_running=args.max_running,
                            fused=args.fused, mesh=mesh,
                            seq_split_pages=args.seq_split_pages,
-                           speculative=spec)
+                           speculative=spec, cache=cache_policy)
+        first_tok = {}
+
+        def on_token(rid, tok):
+            first_tok.setdefault(rid, time.time())
+
         t0 = time.time()
         for p in prompts:
-            eng.add_request(p, max_new=args.max_new)
+            eng.add_request(p, max_new=args.max_new,
+                            on_token=on_token if args.stream else None)
         t_prefill = time.time() - t0
         t0 = time.time()
         outs = eng.run(max_steps)
@@ -187,6 +215,32 @@ def main() -> int:
               f"{st['preempted']} preemptions, {st['reclaimed']} reclaims, "
               f"{st['recompute_tokens']} recomputed tokens, "
               f"{st['prefill_chunks']} prefill chunks{shard_occ}")
+        if args.stream and first_tok:
+            ttfts = sorted(1000 * (first_tok[r] - t0) for r in first_tok)
+            print(f"    streaming: first token after "
+                  f"{ttfts[0]:.0f}–{ttfts[-1]:.0f} ms "
+                  f"({len(first_tok)} streams)")
+        if eng.cache is not None:
+            # second wave: new questions over the same document served
+            # by the SAME engine — admission hits the resident prefix
+            warm = [doc + rng.integers(0, cfg.vocab_size,
+                                       args.q_len).tolist()
+                    for _ in range(args.requests)]
+            t0w = time.time()
+            for p in warm:
+                eng.add_request(p, max_new=args.max_new)
+            eng.run(max_steps)
+            t_warm = time.time() - t0w
+            cs = eng.cache.stats
+            last = eng.step_stats[-1] if eng.step_stats else {}
+            print(f"    prefix cache: warm wave {t_warm:.2f}s, hit rate "
+                  f"{eng.cache.hit_rate:.0%} ({cs['hits']} hits / "
+                  f"{cs['misses']} misses, {cs['hit_tokens']} of "
+                  f"{cs['lookup_tokens']} prompt tokens cached), "
+                  f"resident {last.get('cache_resident_pages', 0)} pages "
+                  f"({last.get('cache_resident_bytes', 0) / 1e6:.1f} MB), "
+                  f"{cs['evicted_nodes']} nodes / {cs['evicted_pages']} "
+                  f"pages evicted")
         unfinished = [r for r, q in eng.requests.items()
                       if len(q.generated) < q.max_new]
         if unfinished:

@@ -85,6 +85,7 @@ from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
 from . import sampler, speculation as spec_mod, step_fn as step_fn_mod
+from .cache import CachePolicy, PrefixCache
 from .kv_cache import PagedKVPool
 
 # request lifecycle states
@@ -124,6 +125,8 @@ class Request:
     computed_hwm: int = 0              # highest position this request ever computed
     pinned: List[int] = dataclasses.field(default_factory=list)
     kv_freed: bool = False             # done + KV reclaimed under pressure
+    on_token: Optional[Any] = None     # streaming callback (rid, token)
+    emitted: int = 0                   # tokens already streamed out
 
     @property
     def done(self) -> bool:
@@ -159,7 +162,7 @@ class DecodeEngine:
                  max_running: Optional[int] = None,
                  fused: bool = False,
                  mesh=None, seq_split_pages: int = 0,
-                 speculative=None):
+                 speculative=None, cache=None):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -241,6 +244,22 @@ class DecodeEngine:
                                     max(cfg.num_kv_heads, 1),
                                     max(cfg.head_dim, 1))
         self.forest = tree_mod.PrefixForest(page_size)
+        # splitting a pinned node must extend each waiting holder's pin
+        # list over the new lower half (see _on_split_pins)
+        self.forest.on_split = self._on_split_pins
+        # ---- persistent cross-request prefix cache (serving/cache.py) - #
+        # cache=True (default policy) or a CachePolicy keeps finished
+        # requests' prefix nodes resident: completed requests *detach*
+        # instead of freeing, LRU/TTL eviction bounds residency, and
+        # cached nodes are the first reclaim tier under pressure.
+        # cache=None (default) preserves the closed-batch behaviour.
+        if cache is True:
+            cache = CachePolicy()
+        self.cache: Optional[PrefixCache] = (
+            PrefixCache(self.forest, cache) if cache is not None else None)
+        # rolling snapshot so step_stats deltas also cover lookups from
+        # eager admissions that happen between steps (add_request)
+        self._cache_snap = dict(self.cache.stats) if self.cache else None
         self.requests: Dict[int, Request] = {}
         self._next_rid = 0
         self.cost_model = CostModel(max(cfg.num_heads, 1),
@@ -326,17 +345,28 @@ class DecodeEngine:
     # ------------------------------------------------------------------ #
     # request admission (admit phase) + chunked prefill (prefill phase)
     # ------------------------------------------------------------------ #
-    def add_request(self, prompt: List[int], max_new: int = 16) -> int:
+    def add_request(self, prompt: List[int], max_new: int = 16,
+                    on_token=None) -> int:
         """Enqueue a request; admits (and prefills) eagerly when memory
-        allows, so under no pressure this behaves like immediate prefill."""
-        need = -(-max(len(prompt), 1) // self.page_size)
+        allows, so under no pressure this behaves like immediate prefill.
+
+        ``on_token(rid, token)`` streams each generated token as soon as
+        its host value exists (immediately on the eager path; at sync
+        boundaries on the fused async path).
+        """
+        # only an *unservable* prompt is an error: whole-prompt prefill
+        # needs every page at once, chunked prefill only one chunk + the
+        # tail it grows into (larger prompts just wait in the queue)
+        need = self.policy.min_working_pages(len(prompt), self.page_size)
         if need > self.pool.num_pages:
             raise MemoryError(
-                f"prompt needs {need} KV pages but the pool holds only "
-                f"{self.pool.num_pages}: it can never be admitted")
+                f"prompt working set needs {need} KV pages but the pool "
+                f"holds only {self.pool.num_pages}: it can never be "
+                f"admitted")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, list(prompt), max_new=max_new)
+        req = Request(rid, list(prompt), max_new=max_new,
+                      on_token=on_token)
         self.requests[rid] = req
         self.admission.push(rid)
         self._admit_phase()
@@ -394,11 +424,12 @@ class DecodeEngine:
                     and len(self._live()) >= self.policy.max_running):
                 return                      # capacity cap, not memory
             head = self.requests[self.admission.peek()]
-            need_total = -(-max(len(head.seq), 1) // self.page_size)
-            if need_total > self.pool.num_pages:
+            need_min = self.policy.min_working_pages(len(head.seq),
+                                                     self.page_size)
+            if need_min > self.pool.num_pages:
                 raise MemoryError(
-                    f"request {head.rid} needs {need_total} KV pages but "
-                    f"the pool holds only {self.pool.num_pages}")
+                    f"request {head.rid} needs a {need_min}-page working "
+                    f"set but the pool holds only {self.pool.num_pages}")
             while not self._has_pages_for(head):
                 if not self._reclaim_one(set(), allow_preempt=False):
                     return                  # no free memory: keep waiting
@@ -418,8 +449,16 @@ class DecodeEngine:
         """(Re-)insert the request's sequence into the forest and release
         the pins it held while waiting (its path now keeps those nodes
         alive by membership)."""
-        self.forest.insert_tokens(req.rid,
-                                  np.asarray(req.seq, np.int32))
+        seq = np.asarray(req.seq, np.int32)
+        if (self.cache is not None and req.preemptions == 0
+                and not req.generated):
+            # first admission only: a preemption resume would count its
+            # own pinned prefix as a "hit" and inflate the rate
+            self.cache.record_lookup(self.forest.match_len(seq), len(seq))
+        self.forest.insert_tokens(req.rid, seq)
+        if self.cache is not None:
+            for node in self.forest.path(req.rid):
+                self.cache.stamp(node)
         for nid in req.pinned:
             node = self.forest.nodes.get(nid)
             if node is not None:
@@ -472,12 +511,22 @@ class DecodeEngine:
     # ------------------------------------------------------------------ #
     # eviction (evict phase) / reclamation
     # ------------------------------------------------------------------ #
-    def _maybe_free_node(self, node) -> None:
+    def _maybe_free_node(self, node, force: bool = False) -> None:
         """Free a node once nothing references it: no requests pass
-        through it, it has no children, and no evicted request pins it."""
+        through it, it has no children, and no evicted request pins it.
+
+        With the prefix cache enabled, page-backed nodes are *retained*
+        instead (they become cache content, reclaimed by TTL/LRU sweep
+        or the pressure tier); ``force=True`` bypasses retention for
+        callers that must actually free (pressure reclaim)."""
         if node.id == tree_mod.ROOT_ID or node.id not in self.forest.nodes:
             return
         if node.requests or node.children or node.meta.get("pins", 0) > 0:
+            return
+        if (not force and self.cache is not None
+                and self.cache.retainable(node)):
+            if "touch" not in node.meta:
+                self.cache.stamp(node)
             return
         if node.page_ids:
             self.pool.allocator.release(node.page_ids)
@@ -568,9 +617,13 @@ class DecodeEngine:
 
     def _reclaim_one(self, exclude: Set[int],
                      allow_preempt: bool = True) -> bool:
-        """Free some pages, cheapest first: (1) finished-request KV,
+        """Free some pages, cheapest first: (0) evict cached (request-
+        less, unpinned) prefix nodes LRU-first, (1) finished-request KV,
         (2) orphaned pinned nodes, (3) preempt the live victim with the
         fewest generated tokens (ties: latest arrival)."""
+        if self.cache is not None and self._evict_cached(1) > 0:
+            self.stats["reclaimed"] += 1
+            return True
         for rid in sorted(self.requests):
             q = self.requests[rid]
             complete = (q.state == DONE
@@ -598,7 +651,7 @@ class DecodeEngine:
                     # holder until the final drop releases the pages)
                     q.pinned.remove(nid)
                     node.meta["pins"] = node.meta.get("pins", 0) - 1
-                    self._maybe_free_node(node)
+                    self._maybe_free_node(node, force=True)
                     if nid not in self.forest.nodes:
                         self.stats["reclaimed"] += 1
                         return True
@@ -614,6 +667,98 @@ class DecodeEngine:
                      key=lambda r: (len(self.requests[r].generated), -r))
         self._preempt(victim)
         return True
+
+    # ------------------------------------------------------------------ #
+    # persistent cross-request prefix cache (serving/cache.py)
+    # ------------------------------------------------------------------ #
+    def _on_split_pins(self, upper, lower) -> None:
+        """Forest split observer: ``tree._split`` copies the pin
+        refcount to the lower half; the per-request pin *lists* must
+        follow, or un-pinning at re-admission would strand the lower
+        half pinned forever."""
+        if upper.meta.get("pins", 0) <= 0:
+            return
+        for req in self.requests.values():
+            if upper.id in req.pinned:
+                req.pinned.append(lower.id)
+
+    def _free_cached_node(self, node) -> None:
+        """Evict one cached leaf: release its pages and unlink it (the
+        parent becomes a future candidate under its own touch stamp)."""
+        self.cache.stats["evicted_nodes"] += 1
+        self.cache.stats["evicted_pages"] += len(node.page_ids)
+        if node.page_ids:
+            self.pool.allocator.release(node.page_ids)
+        parent = self.forest.nodes[node.parent]
+        parent.children.remove(node.id)
+        del self.forest.nodes[node.id]
+        self._maybe_free_node(parent)   # frees empty husks, keeps cache
+
+    def _evict_cached(self, min_pages: int) -> int:
+        """Evict LRU cache entries until >= ``min_pages`` pages freed
+        (or the cache is empty); returns pages actually freed."""
+        freed = 0
+        while freed < min_pages:
+            cands = self.cache.candidates()
+            if not cands:
+                break
+            node = cands[0]
+            freed += len(node.page_ids)
+            self._free_cached_node(node)
+        return freed
+
+    def _detach_finished(self) -> None:
+        """Detach completed requests from the forest, retaining their
+        page-backed prefix nodes as cache (the tentpole behaviour: a
+        finished request's system prompt stays resident for the next
+        request that shares it)."""
+        done = [r for r in sorted(self.requests)
+                if self.requests[r].state == DONE
+                and not self.requests[r].kv_freed
+                and r in self.forest.leaf_of]
+        if not done:
+            return
+        # cached node tokens are matched by VALUE at future admissions;
+        # any in-flight placeholders must land first
+        self.flush_tokens()
+        for rid in done:
+            self._rollback_drafts(rid)
+            path = self.forest.path(rid)
+            self.forest.detach_request(rid)
+            for node in reversed(path):
+                if node.id in self.forest.nodes:
+                    self._maybe_free_node(node)
+            for st in self.mamba_state.values():
+                st.pop(rid, None)
+            self._mamba_pos.pop(rid, None)
+            self.requests[rid].kv_freed = True
+
+    def _cache_sweep(self) -> None:
+        """Per-step TTL expiry + LRU enforcement of ``max_pages``."""
+        while True:
+            expired = [n for n in self.cache.expired()
+                       if n.id in self.forest.nodes]
+            if not expired:
+                break
+            for node in expired:    # parents become leaves next round
+                if node.id in self.forest.nodes:
+                    self._free_cached_node(node)
+        over = self.cache.over_cap()
+        if over > 0:
+            self._evict_cached(over)
+
+    def _stream_ready(self) -> None:
+        """Deliver newly-materialised tokens to streaming callbacks
+        (stops at the first still-deferred placeholder, so fused-mode
+        streams arrive at sync boundaries, in order)."""
+        for req in self.requests.values():
+            if req.on_token is None:
+                continue
+            gen = req.generated
+            while req.emitted < len(gen) and gen[req.emitted] >= 0:
+                tok = gen[req.emitted]
+                req.emitted += 1
+                req.on_token(req.rid, tok)
 
     def _alloc_pages(self, n: int, exclude: Set[int],
                      allow_preempt: bool = True,
@@ -944,6 +1089,24 @@ class DecodeEngine:
         self._admit_phase()
         self._decode_timing = {}
         out = self._decode_phase()
+        if self.cache is not None:
+            self.cache.tick()
+            self._detach_finished()
+            self._cache_sweep()
+        self._stream_ready()
+        cache_stats = {}
+        if self.cache is not None:
+            resident = self.cache.resident_pages()
+            cache_stats = {
+                "cache_hits": self.cache.stats["hits"]
+                - self._cache_snap["hits"],
+                "cache_hit_rate": self.cache.hit_rate,
+                "cache_resident_pages": resident,
+                "cache_resident_bytes": resident * self.pool.page_bytes,
+                "cache_evicted_nodes": self.cache.stats["evicted_nodes"]
+                - self._cache_snap["evicted_nodes"],
+            }
+            self._cache_snap = dict(self.cache.stats)
         self.step_stats.append({
             "step": len(self.step_stats),
             "decoded": len(out),
@@ -965,6 +1128,7 @@ class DecodeEngine:
             "running": len(self._active_rows()),
             "pages_free": self.pool.num_free,
             "occupancy": self.pool.occupancy(),
+            **cache_stats,
         })
         return out
 
@@ -1629,6 +1793,7 @@ class DecodeEngine:
                 break
             self.step()
         self.flush_tokens()
+        self._stream_ready()
         return {r: req.generated for r, req in self.requests.items()}
 
     def release(self, rid: int) -> None:

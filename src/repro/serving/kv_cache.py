@@ -106,6 +106,13 @@ class PagedKVPool:
     def num_free(self) -> int:
         return self.allocator.num_free
 
+    @property
+    def page_bytes(self) -> int:
+        """K+V bytes of one page across all attention layers."""
+        per = self.k.shape[0] * self.k.shape[2] * self.k.shape[3] \
+            * self.k.shape[4]
+        return 2 * per * self.k.dtype.itemsize
+
     def occupancy(self) -> float:
         return self.allocator.occupancy()
 

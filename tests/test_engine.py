@@ -324,3 +324,55 @@ def test_engine_oom_raises():
     eng, cfg, params = _engine("qwen2.5-14b", num_pages=4)
     with pytest.raises(MemoryError):
         eng.add_request(list(range(1000)), max_new=2)
+
+
+def test_oversized_prompt_queues_under_chunked_prefill():
+    """Regression: admission raised MemoryError whenever a prompt's
+    TOTAL page need exceeded the pool, even though chunked prefill only
+    needs one chunk + tail resident at a time.  Only the working set
+    decides servability; larger prompts stay queued."""
+    eng, cfg, params = _engine("qwen2.5-14b", num_pages=8,
+                               prefill_chunk=16)
+    rid = eng.add_request(list(range(1000)), max_new=2)   # 63 total pages
+    assert eng.requests[rid].state == "waiting"           # queued, no raise
+    eng.step()
+    assert eng.requests[rid].state == "waiting"
+    # whole-prompt prefill (no chunking) still fails fast
+    with pytest.raises(MemoryError):
+        _engine("qwen2.5-14b", num_pages=8)[0].add_request(
+            list(range(1000)), max_new=2)
+
+
+def test_split_while_pinned_keeps_both_halves_protected():
+    """Regression: splitting a pinned prefix node dropped the pin on
+    the lower half, so releasing the sharing request freed KV that a
+    preempted waiter's admission estimate still counted on."""
+    eng, cfg, params = _engine("qwen2.5-14b", page_size=8, num_pages=64)
+    doc = list(range(10, 42))                   # 32 tokens = 4 pages
+    r0 = eng.add_request(doc + [1, 2], max_new=4)
+    r1 = eng.add_request(doc + [3, 4], max_new=4)
+    eng.step()
+    eng._preempt(r1)                 # r1 waits, pinning the shared doc
+    eng.admission.remove(r1)         # hold it out so it cannot resume yet
+    assert eng.requests[r1].pinned
+    # r2 shares only half the doc -> splits the pinned node
+    r2 = eng.add_request(doc[:16] + [5, 6], max_new=2)
+    eng.run(16)
+    assert eng.requests[r0].done and eng.requests[r2].done
+    eng.release(r0)
+    eng.release(r2)
+    # the whole 4-page pinned span must survive the releases (pre-fix
+    # the unpinned lower half was freed: only 2 pages remained)
+    pinned = [n for n in eng.forest.real_nodes()
+              if n.meta.get("pins", 0) > 0]
+    assert sum(len(n.page_ids) for n in pinned) == 4
+    # the waiter's pin list covers every pinned node (on_split extension)
+    assert sorted(eng.requests[r1].pinned) == sorted(n.id for n in pinned)
+    # resume: unpinning releases both halves; nothing leaks
+    eng.admission.push(r1)
+    eng.run(32)
+    assert len(eng.requests[r1].generated) == 4
+    eng.release(r1)
+    assert eng.pool.allocator.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+    assert set(eng.forest.nodes) == {0}

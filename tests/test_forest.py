@@ -113,6 +113,33 @@ def test_append_token_forks_shared_leaf():
     assert toks0[-1] == 100
 
 
+def test_split_propagates_pins_to_both_halves():
+    """Regression: ``_split`` copied ``filled``/``ssm`` metadata but
+    dropped ``meta["pins"]`` on the new lower half, so a pinned prefix
+    tail could be split and its lower half freed out from under the
+    waiting request that pinned it."""
+    bs = 4
+    f = tree_mod.PrefixForest(bs)
+    f.insert_tokens(0, np.arange(16, dtype=np.int32))
+    # an evicted request pins its whole path, then detaches (engine
+    # preemption: membership is dropped, the pin keeps the KV alive)
+    for n in f.path(0):
+        n.meta["pins"] = n.meta.get("pins", 0) + 1
+    f.detach_request(0)
+    splits = []
+    f.on_split = lambda upper, lower: splits.append((upper.id, lower.id))
+    # a new request sharing only the first 8 tokens splits the pinned node
+    f.insert_tokens(1, np.concatenate([np.arange(8),
+                                       [90, 91]]).astype(np.int32))
+    f.validate()
+    assert splits, "insertion must have split the pinned node"
+    pinned = [n for n in f.real_nodes() if n.meta.get("pins", 0) > 0]
+    # the full 16-token pinned span stays protected (pre-fix: 8)
+    assert sum(n.length for n in pinned) == 16
+    upper_id, lower_id = splits[0]
+    assert f.nodes[upper_id].meta["pins"] == f.nodes[lower_id].meta["pins"]
+
+
 def test_split_preserves_requests_and_pages():
     bs = 4
     f = tree_mod.PrefixForest(bs)

@@ -1,0 +1,201 @@
+"""Persistent cross-request prefix cache + streaming (DESIGN.md §11).
+
+Engine-lifetime persistence: completed requests detach but their prefix
+nodes stay resident, so a later wave over the same document skips its
+prefill; LRU/TTL policy bounds residency; cached nodes are the first
+reclaim tier under pressure; token streams stay byte-identical to a
+cold engine.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import tree as tree_mod
+from repro.models import transformer as T
+from repro.serving.cache import CachePolicy, PrefixCache
+from repro.serving.engine import DecodeEngine
+
+CFG = smoke_config("qwen2.5-14b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+PAGE = 16
+DOC = list(range(100, 148))          # 48 tokens = 3 pages shared prefix
+
+
+def _engine(**kw):
+    defaults = dict(page_size=PAGE, num_pages=128, backend="codec-xla",
+                    max_q=8, temperature=0.0)
+    defaults.update(kw)
+    return DecodeEngine(CFG, PARAMS, **defaults)
+
+
+def _wave(i, n=3):
+    """n prompts sharing DOC, with wave- and request-unique tails."""
+    return [DOC + [200 + 10 * i + k, 300 + k] for k in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# cache policy unit tests (LRU order, TTL expiry)
+# --------------------------------------------------------------------- #
+def test_lru_order_and_ttl_unit():
+    f = tree_mod.PrefixForest(4)
+    f.insert_tokens(0, np.arange(8, dtype=np.int32))
+    f.insert_tokens(1, np.asarray([90, 91, 92, 93], np.int32))
+    cache = PrefixCache(f, CachePolicy(ttl_steps=2, max_pages=1))
+    na = f.nodes[f.leaf_of[0]]
+    nb = f.nodes[f.leaf_of[1]]
+    na.page_ids = [0, 1]
+    nb.page_ids = [2]
+    cache.stamp(na)                  # touched at clock 0
+    cache.tick(); cache.tick()
+    cache.stamp(nb)                  # touched at clock 2
+    f.detach_request(0)
+    f.detach_request(1)
+    # LRU: least recently touched first
+    assert [n.id for n in cache.candidates()] == [na.id, nb.id]
+    assert cache.resident_pages() == 3
+    assert cache.over_cap() == 2
+    # TTL at clock 3: A aged out (3 > 2), B not (1)
+    cache.tick()
+    assert [n.id for n in cache.expired()] == [na.id]
+    # a fresh touch rescues A from both expiry and LRU headship
+    cache.stamp(na)
+    assert not cache.expired()
+    assert [n.id for n in cache.candidates()] == [nb.id, na.id]
+
+
+def test_retainable_excludes_drafts_and_empty_leaves():
+    f = tree_mod.PrefixForest(4)
+    f.insert_tokens(0, np.arange(8, dtype=np.int32))
+    cache = PrefixCache(f)
+    node = f.nodes[f.leaf_of[0]]
+    node.page_ids = [0, 1]
+    assert cache.retainable(node)
+    d = f.add_draft(node.id, 42)
+    d.page_ids = [2]
+    assert not cache.retainable(d)           # unverified draft tokens
+    empty = f.add_node(node.id, 0, np.zeros(0, np.int32))
+    assert not cache.retainable(empty)       # nothing worth keeping
+
+
+# --------------------------------------------------------------------- #
+# engine-lifetime persistence
+# --------------------------------------------------------------------- #
+def test_two_waves_hit_cached_system_prompt():
+    streams = {}
+
+    def cb(rid, tok):
+        streams.setdefault(rid, []).append(tok)
+
+    eng = _engine(cache=True)
+    for p in _wave(0):
+        eng.add_request(p, max_new=4, on_token=cb)
+    eng.run(32)
+    prefill_w1 = eng.stats["prefill_tokens"]
+    hits_w1 = eng.cache.stats["hits"]
+    assert eng.cache.resident_pages() > 0         # doc stayed resident
+    # wave 2 through the SAME engine hits wave 1's cached document
+    w2 = _wave(1)
+    assert eng.forest.match_len(np.asarray(w2[0], np.int32)) >= len(DOC)
+    for p in w2:
+        eng.add_request(p, max_new=4, on_token=cb)
+    eng.run(32)
+    assert eng.cache.stats["hits"] > hits_w1      # hit-rate incremented
+    assert eng.cache.hit_rate > 0
+    assert any(s.get("cache_hits", 0) > 0 for s in eng.step_stats)
+    assert eng.step_stats[-1]["cache_resident_bytes"] > 0
+    # wave 2 prefilled only the private tails, never the 48-token doc
+    assert (eng.stats["prefill_tokens"] - prefill_w1
+            == sum(len(p) - len(DOC) for p in w2))
+    # token streams byte-identical to a cold (cache-less) engine
+    cold = _engine()
+    for p in _wave(0) + _wave(1):
+        cold.add_request(p, max_new=4)
+    cold_out = cold.run(32)
+    warm = {r: q.generated for r, q in eng.requests.items()}
+    assert warm == cold_out
+    assert streams == warm                        # callbacks saw it all
+
+
+def test_release_after_detach_keeps_cache():
+    eng = _engine(cache=True)
+    r = eng.add_request(DOC + [1, 2], max_new=2)
+    eng.run(8)
+    eng.release(r)                   # the request goes, its prefix stays
+    assert r not in eng.requests
+    assert eng.forest.match_len(np.asarray(DOC, np.int32)) == len(DOC)
+    eng.pool.allocator.check()
+    eng.forest.validate()
+
+
+# --------------------------------------------------------------------- #
+# eviction: TTL sweep, LRU cap, pressure tier
+# --------------------------------------------------------------------- #
+def test_ttl_eviction_empties_cache():
+    eng = _engine(cache=CachePolicy(ttl_steps=3))
+    for p in _wave(0, n=2):
+        eng.add_request(p, max_new=3)
+    eng.run(32)
+    assert eng.cache.resident_pages() > 0
+    for _ in range(12):              # idle: the clock ticks past the TTL
+        eng.step()
+    assert eng.cache.stats["evicted_nodes"] > 0
+    assert eng.cache.resident_pages() == 0
+    assert eng.pool.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+    eng.forest.validate()
+
+
+def test_max_pages_cap_evicts_lru_first():
+    doc_a = list(range(100, 164))    # each doc: 4 pages (+1 tail page)
+    doc_b = list(range(300, 364))
+    eng = _engine(cache=CachePolicy(max_pages=5), num_pages=256)
+    eng.add_request(doc_a + [1, 2], max_new=2)
+    eng.run(16)
+    eng.add_request(doc_b + [3, 4], max_new=2)
+    eng.run(16)
+    # the cap forced the LRU doc (A) out; B stays resident
+    assert eng.cache.resident_pages() <= 5
+    assert eng.cache.stats["evicted_pages"] > 0
+    assert eng.forest.match_len(np.asarray(doc_b, np.int32)) == 64
+    assert eng.forest.match_len(np.asarray(doc_a, np.int32)) < 64
+    eng.pool.allocator.check()
+
+
+def test_pressure_reclaims_cache_before_preempting():
+    doc_a = list(range(100, 164))    # 64 tokens -> 5 cached pages
+    eng = _engine(cache=True, num_pages=12)
+    eng.add_request(doc_a + [1, 2], max_new=2)
+    eng.run(16)
+    assert eng.cache.resident_pages() > 0
+    # two fresh disjoint requests outgrow the free list: the cached doc
+    # is the FIRST reclaim tier, so no live request gets preempted
+    r1 = eng.add_request(list(range(300, 348)), max_new=4)
+    r2 = eng.add_request(list(range(400, 448)), max_new=4)
+    eng.run(32)
+    assert len(eng.requests[r1].generated) == 4
+    assert len(eng.requests[r2].generated) == 4
+    assert eng.cache.stats["evicted_pages"] > 0
+    assert eng.stats["preempted"] == 0
+    eng.pool.allocator.check()
+
+
+# --------------------------------------------------------------------- #
+# streaming callbacks
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("fused", [False, True])
+def test_streaming_callbacks_in_order(fused):
+    got = {}
+
+    def cb(rid, tok):
+        got.setdefault(rid, []).append(tok)
+
+    eng = _engine(fused=fused, cache=True)
+    rids = [eng.add_request(p, max_new=5, on_token=cb)
+            for p in _wave(0, n=2)]
+    eng.run(32)
+    for r in rids:
+        assert got[r] == eng.requests[r].generated
+        assert len(got[r]) == 5
+        assert all(t >= 0 for t in got[r])   # placeholders never leak

@@ -160,6 +160,62 @@ def test_accept_walk_greedy_rule():
     assert acc == [] and fin == 10                  # room cap
 
 
+def test_match_skips_draft_nodes():
+    """Regression: ``_match_child`` descended into ``meta["draft"]``
+    nodes, so ``match_len`` (admission sizing) and ``insert_tokens``
+    could match a new request into another request's *unverified*
+    draft tokens — which may be rolled back after the verify step."""
+    f = tree_mod.PrefixForest(1)       # page 1: single-token drafts match
+    f.insert_tokens(0, np.asarray([5, 6, 7], np.int32))
+    leaf = f.nodes[f.leaf_of[0]]
+    d = f.add_draft(leaf.id, 8)
+    f.attach_request(-2, d.id)
+    # pure match must stop at the committed frontier (pre-fix: 4)
+    assert f.match_len(np.asarray([5, 6, 7, 8, 9], np.int32)) == 3
+    # insertion must fork a committed sibling, not ride the draft
+    f.insert_tokens(1, np.asarray([5, 6, 7, 8], np.int32))
+    assert all(not n.meta.get("draft") for n in f.path(1))
+    # the draft tree still rolls back cleanly afterwards
+    f.detach_request(-2)
+    f.prune_leaf(d.id)
+    f.validate()
+
+
+def test_admission_concurrent_with_inflight_draft_tree():
+    """A request admitted while another request's draft tree is in
+    flight must not share the draft KV: pre-fix its radix insertion
+    attached it through a draft node, and the verify step's rollback
+    then hit ``prune_leaf`` asserts (request/children on a draft)."""
+    eng = DecodeEngine(CFG, PARAMS, page_size=1, num_pages=256,
+                       backend="codec-xla", max_q=8, temperature=0.0,
+                       speculative=SpecConfig())
+    r0 = eng.add_request(list(REP_PROMPT), max_new=8)
+    for _ in range(4):
+        eng.step()
+    assert eng.requests[r0].state == RUNNING
+    # hold an in-flight draft tree open, exactly as mid-verify
+    eng._grow_drafts([r0])
+    st = eng._drafts.get(r0)
+    assert st is not None and st.nodes, "repetitive stream must draft"
+    draft_tok = int(eng.forest.nodes[st.nodes[0]].tokens[0])
+    # a second request arrives whose prompt extends into the draft
+    committed = list(eng.requests[r0].seq)
+    r1 = eng.add_request(committed + [draft_tok, 999], max_new=2)
+    path1 = eng.forest.path(r1)
+    assert all(not n.meta.get("draft") for n in path1)
+    # the draft tree must still roll back cleanly (pre-fix: AssertionError)
+    eng._rollback_drafts(r0)
+    eng.forest.validate()
+    eng.run(96)
+    assert len(eng.requests[r0].generated) == 8
+    assert len(eng.requests[r1].generated) == 2
+    for q in list(eng.requests):
+        eng.release(q)
+    assert eng.pool.num_free == eng.pool.num_pages
+    eng.pool.allocator.check()
+    assert set(eng.forest.nodes) == {0}
+
+
 # --------------------------------------------------------------------- #
 # verify plan vs per-branch dense oracle (from examples/tree_speculation)
 # --------------------------------------------------------------------- #
