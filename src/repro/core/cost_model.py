@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -62,6 +62,7 @@ class CostModel:
         self.bytes_per = int(bytes_per)
         self.page_size = int(page_size)
         self.hw = hw or HardwareSpec()
+        self.calibrated = False           # set by fit(); datasheet until then
         self._table = dict(table) if table else None
         self._grid: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
         if self._table:
@@ -102,17 +103,29 @@ class CostModel:
                     vals[i, j] = self.analytic(int(nq), int(n))
         self._grid = (np.log2(nqs), np.log2(ns), vals)
 
+    @staticmethod
+    def _axis_cell(axis: np.ndarray, x: float) -> Tuple[int, int, float]:
+        """Clamped 1-D interpolation cell ``(lo, hi, t)`` on a log2 axis.
+
+        A single-valued axis degrades to nearest (``lo == hi``, ``t = 0``)
+        instead of going through ``np.clip(searchsorted - 1, 0, -1)``,
+        whose min > max behaviour is undefined by numpy and only worked
+        by the accident of Python's negative-index wrapping.
+        """
+        if len(axis) == 1:
+            return 0, 0, 0.0
+        lo = int(np.clip(np.searchsorted(axis, x) - 1, 0, len(axis) - 2))
+        hi = lo + 1
+        t = float(np.clip((x - axis[lo]) / (axis[hi] - axis[lo]), 0.0, 1.0))
+        return lo, hi, t
+
     def _interp(self, n_q: int, n: int) -> float:
         lnq, ln, vals = self._grid
         x, y = np.log2(max(n_q, 1)), np.log2(max(n, 1))
-        i = int(np.clip(np.searchsorted(lnq, x) - 1, 0, len(lnq) - 2))
-        j = int(np.clip(np.searchsorted(ln, y) - 1, 0, len(ln) - 2))
-        tx = 0.0 if lnq[i + 1] == lnq[i] else np.clip(
-            (x - lnq[i]) / (lnq[i + 1] - lnq[i]), 0.0, 1.0)
-        ty = 0.0 if ln[j + 1] == ln[j] else np.clip(
-            (y - ln[j]) / (ln[j + 1] - ln[j]), 0.0, 1.0)
-        v = (vals[i, j] * (1 - tx) * (1 - ty) + vals[i + 1, j] * tx * (1 - ty)
-             + vals[i, j + 1] * (1 - tx) * ty + vals[i + 1, j + 1] * tx * ty)
+        i, i2, tx = self._axis_cell(lnq, x)
+        j, j2, ty = self._axis_cell(ln, y)
+        v = (vals[i, j] * (1 - tx) * (1 - ty) + vals[i2, j] * tx * (1 - ty)
+             + vals[i, j2] * (1 - tx) * ty + vals[i2, j2] * tx * ty)
         return float(v)
 
     # ------------------------------------------------------------------ #
@@ -130,19 +143,91 @@ class CostModel:
         """Estimated seconds to POR-merge ``n_splits`` sequence-parallel
         partials of ``n_q`` queries across devices.
 
-        The butterfly merge (``kernels.por.por_allmerge``) runs
-        ``ceil(log2 n_splits)`` ppermute rounds; each round moves one
-        partial set — ``(o, m, l)`` is ``n_q * h_q * (d + 2)`` f32 values
-        — over an ICI link and pays one launch.  The scheduler charges
-        this to every sequence-split it creates, so splitting a long
-        shared-prefix node across devices must beat the wire cost it
-        introduces.
+        The sparse merge (``kernels.por.por_subgroup_merge``) packs the
+        ``(o, m, l)`` partials of the ``n_q`` merge-needing rows into ONE
+        ``(n_q, h_q, d + 2)`` f32 buffer and runs ``ceil(log2 n_splits)``
+        ppermute rounds of exactly one transfer each — so the model
+        charges one launch and one wire move per round, which now matches
+        the kernel (the old three-ppermute butterfly paid 3 launches a
+        round for the same bytes; see ``por_allmerge``).  ``n_q`` is the
+        number of rows that actually cross the wire — rows whose KV is
+        replicated or single-shard-local everywhere are packed out of the
+        buffer and cost nothing (``n_q == 0`` skips the collective
+        entirely).  The scheduler charges this ONCE per step on top of
+        the slowest shard; per-subtask surcharges would double-count it.
         """
         if n_splits <= 1 or n_q <= 0:
             return 0.0
         rounds = int(np.ceil(np.log2(n_splits)))
-        wire = n_q * self.h_q * (self.d + 2) * 4  # f32 o/m/l per round
+        wire = n_q * self.h_q * (self.d + 2) * 4  # packed f32 o/m/l buffer
         return rounds * (wire / self.hw.ici_bw + self.hw.launch_overhead)
+
+    def replicate_gain(self, n_q: int, n: int, num_shards: int) -> float:
+        """Per-step seconds saved by replicating a node on every shard
+        instead of sequence-splitting it across ``num_shards``.
+
+        Replication removes the node's rows from the cross-shard merge
+        (their partials are computed bitwise-identically everywhere) but
+        makes every shard attend over the FULL node instead of ``1/D`` of
+        it, adding ``(D-1)/D`` of the node's cost to each shard's
+        makespan.  Positive gain -> replicate (short hot prefixes: the
+        Hydragen observation); negative -> split (long documents: the
+        parallel-read win).  Callers must still gate on free-page
+        headroom — this is a time trade, not a memory one.
+        """
+        if num_shards <= 1:
+            return 0.0
+        extra = self(n_q, n) * (num_shards - 1) / num_shards
+        return self.merge_cost(num_shards, n_q) - extra
+
+    def fit(self, samples: Sequence[Dict[str, float]],
+            min_samples: int = 8) -> bool:
+        """Re-fit hardware coefficients from measured step timings.
+
+        ``samples`` are per-step feature dicts — ``hbm_bytes``,
+        ``grid_steps``, ``merge_bytes``, ``merge_rounds``, ``seconds`` —
+        as recorded in the engine's ``step_stats``.  Solves the
+        non-negative least squares ``seconds ~= hbm_bytes/bw +
+        grid_steps*step_ovh + merge_bytes/ici_bw + merge_rounds*launch +
+        const`` (columns without variation keep their current
+        coefficient) and installs the fitted :class:`HardwareSpec`, so
+        subsequent division/balancing/merge decisions use measured
+        rather than datasheet costs.  Returns True when a fit was
+        installed.
+        """
+        rows = [s for s in samples
+                if s.get("seconds", 0.0) > 0.0 and s.get("hbm_bytes", 0) > 0]
+        if len(rows) < min_samples:
+            return False
+        feats = ["hbm_bytes", "grid_steps", "merge_bytes", "merge_rounds"]
+        A = np.array([[float(s.get(f, 0.0)) for f in feats] + [1.0]
+                      for s in rows])
+        b = np.array([float(s["seconds"]) for s in rows])
+        # normalise columns so lstsq conditioning survives byte counts
+        scale = np.maximum(np.abs(A).max(axis=0), 1e-30)
+        coef, *_ = np.linalg.lstsq(A / scale, b, rcond=None)
+        coef = np.maximum(coef / scale, 0.0)
+        hw = self.hw
+        # a coefficient is identifiable only when its column actually
+        # spans a range — a near-constant column (decode steady state
+        # varies a few percent) is collinear with the const term and
+        # lstsq splits their weight arbitrarily, amplifying noise into
+        # nonsense bandwidths — so require >=30% relative variation
+        # before overriding the datasheet/prior value
+        varies = (np.abs(A - A.mean(axis=0)).max(axis=0)
+                  > 0.3 * np.maximum(np.abs(A).max(axis=0), 1e-30))
+        self.hw = HardwareSpec(
+            peak_flops=hw.peak_flops,
+            hbm_bw=(1.0 / coef[0] if varies[0] and coef[0] > 0
+                    else hw.hbm_bw),
+            ici_bw=(1.0 / coef[2] if varies[2] and coef[2] > 0
+                    else hw.ici_bw),
+            grid_step_overhead=(float(coef[1]) if varies[1]
+                                else hw.grid_step_overhead),
+            launch_overhead=(float(coef[3]) if varies[3] and coef[3] > 0
+                             else hw.launch_overhead))
+        self.calibrated = True
+        return True
 
     # convenience for the scheduler: is a task memory- or compute-bound?
     def bound(self, n_q: int, n: int) -> str:

@@ -440,6 +440,15 @@ class ShardedPlan:
     makespan: float            # slowest shard + ICI merge term
     merge_cost: float          # cross-device POR merge estimate (s)
     seq_splits: int            # subtasks cut at a shard boundary
+    # sparse-merge ownership (rows are the bucketed query rows):
+    # merge_rows[r] — True iff row r's partials differ across shards and
+    # must cross the wire; row_shards[s, r] — True iff shard s computes a
+    # shard-local (non-replicated) contribution to row r.  The engine ORs
+    # tail ownership into row_shards and derives the packed gather /
+    # scatter indices + the contributor vector from these.
+    merge_rows: Optional[np.ndarray] = None
+    row_shards: Optional[np.ndarray] = None
+    replicated: Optional[set] = None   # node ids planned from replicas
 
     def stats(self) -> Dict[str, float]:
         local = [p.makespan for p in self.shards]
@@ -449,7 +458,47 @@ class ShardedPlan:
                     shard_makespans=local,
                     shard_imbalance=(max(local) / (sum(local) / len(local))
                                      if local and sum(local) > 0 else 1.0),
-                    mean_grid_occupancy=sum(occ) / max(len(occ), 1))
+                    mean_grid_occupancy=sum(occ) / max(len(occ), 1),
+                    replicated_nodes=len(self.replicated or ()),
+                    merge_row_count=(int(self.merge_rows.sum())
+                                     if self.merge_rows is not None else 0))
+
+
+def replicated_node_set(forest: PrefixForest, num_shards: int,
+                        req_rows: Dict[int, int]) -> tuple:
+    """Nodes plannable from replicas + per-request full-replication flag.
+
+    A node is a replication *candidate* when the engine stored a complete
+    replica set (``node.meta["replicas"]`` with one page list per shard).
+    But a candidate is only *usable* if every query row it serves has its
+    ENTIRE path (and hence its leaf tail) replicated: a row with any
+    shard-local contribution must POR-merge across shards, and that merge
+    would double-count a contribution computed identically on every
+    shard (LSE-merging X with itself is not X).  So we run a fixpoint —
+    drop candidates serving a not-fully-replicated row, recompute row
+    flags, repeat — and plan the dropped candidates from their primary
+    pages like ordinary nodes (their replicas stay resident for later
+    epochs).  Returns ``(node_ids, {request_id: fully_replicated})``.
+    """
+    active = set(req_rows)
+    R = {n.id for n in forest.real_nodes()
+         if len(n.meta.get("replicas", {})) == num_shards}
+    full: Dict[int, bool] = {r: False for r in active}
+    if not R:
+        return set(), full
+    while True:
+        for r in active:
+            path = forest.path(r)
+            full[r] = bool(path) and all(n.id in R for n in path)
+        r2 = set()
+        for n in forest.real_nodes():
+            if n.id in R:
+                qs = _node_queries(n, active)
+                if qs and all(full[q] for q in qs):
+                    r2.add(n.id)
+        if r2 == R:
+            return R, full
+        R = r2
 
 
 def build_sharded_plan(forest: PrefixForest,
@@ -475,6 +524,16 @@ def build_sharded_plan(forest: PrefixForest,
     ICI cost the scheduler charges); each shard's subtasks are then
     LPT-balanced over its own ``num_lanes`` halves and compiled with
     the standard single-device machinery.
+
+    Nodes the engine *replicated* (``node.meta["replicas"]`` holding a
+    complete per-shard page list, see ``replicated_node_set``) are
+    planned once and prepended identically to every shard's schedule;
+    each shard's page arrays are remapped to its own replica rows.
+    Rows whose whole path is replicated are computed bitwise
+    identically everywhere and excluded from the merge; the rest are
+    exposed via ``merge_rows`` / ``row_shards`` for the sparse subgroup
+    merge, and the merge term is sized by the merge-row count instead
+    of the whole batch.
     """
     from .scheduler import divide_and_schedule_sharded
 
@@ -483,36 +542,73 @@ def build_sharded_plan(forest: PrefixForest,
     active = set(req_rows)
     tasks = tasks_from_forest(forest, truncate, active)
     node_by_id = {n.id: n for n in forest.real_nodes()}
+    rows = num_rows if num_rows is not None else len(req_rows)
+
+    rep_nodes, full_rep = replicated_node_set(forest, num_shards, req_rows)
+    merge_mask = np.zeros(max(rows, 1), dtype=bool)
+    for rid, row in req_rows.items():
+        if row < rows and not full_rep.get(rid, False):
+            merge_mask[row] = True
+
     sched = divide_and_schedule_sharded(
         tasks, cost_model, num_shards, num_lanes, forest.block_size,
         node_pages=lambda nid: node_by_id[nid].page_ids,
         shard_of_page=lambda g: g // page_stride,
         num_queries=len(req_rows),
-        max_kv_per_task=max_kv_per_task, max_q_per_task=max_q)
+        max_kv_per_task=max_kv_per_task, max_q_per_task=max_q,
+        replicated=rep_nodes,
+        num_merge_queries=int(merge_mask.sum()))
+
+    # shard-local contributors per row (tail owners are ORed in by the
+    # engine).  Over-approximation is safe — a listed shard that ends up
+    # contributing identity partials still merges correctly.
+    row_shards = np.zeros((num_shards, max(rows, 1)), dtype=bool)
+    for s, sh in enumerate(sched.shards):
+        for sub in sh.subtasks:
+            if sub.node_id in rep_nodes:
+                continue
+            node = node_by_id[sub.node_id]
+            for rid in _node_queries(node, active)[sub.q_lo:sub.q_hi]:
+                row = req_rows[rid]
+                if row < rows:
+                    row_shards[s, row] = True
 
     shards = [build_plan(forest, cost_model, num_lanes, max_q,
                          max_kv_per_task, schedule=s, req_rows=req_rows,
                          window=window, truncate=truncate)
               for s in sched.shards]
 
+    # per-shard page localization: global row -> that shard's local row.
+    # Default is g % page_stride; rows of replicated nodes instead map to
+    # the shard's OWN replica rows (node.page_ids holds the primary's).
+    remaps = []
+    for s in range(num_shards):
+        remap = (np.arange(num_shards * page_stride, dtype=np.int32)
+                 % page_stride)
+        for nid in rep_nodes:
+            node = node_by_id[nid]
+            rep = node.meta["replicas"][s]
+            remap[np.asarray(node.page_ids, dtype=np.int64)] = (
+                np.asarray(rep, dtype=np.int32) % page_stride)
+        remaps.append(remap)
+
     # common buckets so stacked (D, ...) arrays stay rectangular
-    rows = num_rows if num_rows is not None else len(req_rows)
     steps_t = bucket_pow2(max(p.max_steps for p in shards))
     tasks_t = bucket_pow2(max(p.task_qnum.shape[0] for p in shards))
     pages_t = bucket_pow2(max(p.max_pages for p in shards))
     out = []
-    for p in shards:
+    for s, p in enumerate(shards):
         p = bucket_plan(p, rows, steps=steps_t, tasks=tasks_t,
                         pages=pages_t)
-        # global page rows -> shard-local rows.  Padding/foreign entries
-        # fold into [0, stride) too — they are masked (step_valid = 0 /
-        # kvlen bounds) everywhere, so reading a wrong-but-resident local
-        # page is harmless.
-        p.step_page = p.step_page % page_stride
-        p.task_pages = p.task_pages % page_stride
+        # Padding/foreign entries fold into [0, stride) too — they are
+        # masked (step_valid = 0 / kvlen bounds) everywhere, so reading a
+        # wrong-but-resident local page is harmless.
+        p.step_page = remaps[s][p.step_page]
+        p.task_pages = remaps[s][p.task_pages]
         out.append(p)
     return ShardedPlan(out, num_shards, sched.makespan, sched.merge_cost,
-                       sched.seq_splits)
+                       sched.seq_splits, merge_rows=merge_mask,
+                       row_shards=row_shards, replicated=rep_nodes)
 
 
 def _relane(subs: Sequence[SubTask], schedule: Schedule, num_lanes: int):

@@ -294,9 +294,14 @@ def split_at_shard_boundaries(subs: Sequence[SubTask], node_pages,
     ``shard_of_page(page_id)`` its owning shard.  Returns per-shard
     subtask lists plus the number of *nodes* whose KV ended up on more
     than one shard (sequence splits — their partials meet again in the
-    cross-device POR merge).  Subtasks cut mid-slice are surcharged with
-    the cost-model's ICI merge term so LPT balancing sees the true
-    price of a sequence split.
+    cross-device POR merge).  Pieces carry only their LOCAL compute
+    cost: the ICI merge is charged exactly once per step by the caller
+    (``ShardedSchedule.merge_cost``).  The old per-piece surcharge
+    double-counted the merge — every piece of every split node paid the
+    full butterfly on top of the global charge, which (a) inflated the
+    predicted makespan quadratically in the split count and (b) made
+    LPT treat cheap split fragments as expensive, so it piled unrelated
+    work onto the unsplit shards.
     """
     ps = page_size
     out: Dict[int, List[SubTask]] = {}
@@ -313,13 +318,12 @@ def split_at_shard_boundaries(subs: Sequence[SubTask], node_pages,
                 runs[-1] = (sh, runs[-1][1], pi + 1)
             else:
                 runs.append((sh, pi, pi + 1))
-        surcharge = cost.merge_cost(len(runs), s.n_q) if len(runs) > 1 else 0.0
         for sh, pa, pb in runs:
             lo = max(s.kv_lo, pa * ps)
             hi = min(s.kv_hi, pb * ps)
             out.setdefault(sh, []).append(
                 SubTask(s.node_id, s.q_lo, s.q_hi, lo, hi,
-                        cost(s.n_q, hi - lo) + surcharge))
+                        cost(s.n_q, hi - lo)))
     seq_splits = sum(1 for shards in node_shards.values() if len(shards) > 1)
     shards = [out.get(sh, []) for sh in range(max(out, default=0) + 1)]
     return shards, seq_splits
@@ -331,16 +335,39 @@ def divide_and_schedule_sharded(tasks: Sequence[TaskSpec], cost: CostModel,
                                 num_queries: int,
                                 max_kv_per_task: Optional[int] = None,
                                 max_q_per_task: Optional[int] = None,
+                                replicated: Optional[set] = None,
+                                num_merge_queries: Optional[int] = None,
                                 ) -> ShardedSchedule:
     """Mesh-aware §5.1 solver: divide over ``num_shards *
     lanes_per_shard`` (device, half) slots, force shard assignment by
     page residency (cutting sequence-split subtasks at shard
     boundaries), then LPT each shard's subtasks over its own halves.
 
-    The returned makespan charges the cross-device POR merge of the
-    live batch (``CostModel.merge_cost``) on top of the slowest shard.
+    ``replicated`` names node ids whose KV is replicated on every shard
+    (``ShardedKVPool`` replica placement): their tasks are divided over
+    ONE shard's lanes and the identical subtask list is prepended to
+    every shard's schedule — same slot indices, same slice boundaries —
+    so each shard computes those partials bitwise identically and they
+    never cross the wire.  LPT sees them as local work on every shard
+    (which they are: replication trades ``(D-1)/D`` extra reads for
+    zero merge traffic — ``CostModel.replicate_gain``).
+
+    The returned makespan charges the cross-device POR merge once on
+    top of the slowest shard, sized by ``num_merge_queries`` — the rows
+    whose KV actually spans shards (falls back to ``num_queries``).
     """
-    base = divide_and_schedule(tasks, cost, num_shards * lanes_per_shard,
+    replicated = replicated or set()
+    rep_tasks = [t for t in tasks if t.node_id in replicated]
+    loc_tasks = [t for t in tasks if t.node_id not in replicated]
+    rep_subs: List[SubTask] = []
+    if rep_tasks:
+        # divide for ONE shard's lanes: every shard runs the same copy
+        rep_subs = divide_and_schedule(
+            rep_tasks, cost, lanes_per_shard, page_size,
+            max_kv_per_task=max_kv_per_task,
+            max_q_per_task=max_q_per_task).subtasks
+    base = divide_and_schedule(loc_tasks, cost,
+                               num_shards * lanes_per_shard,
                                page_size, max_kv_per_task=max_kv_per_task,
                                max_q_per_task=max_q_per_task)
     per_shard, seq_splits = split_at_shard_boundaries(
@@ -348,10 +375,12 @@ def divide_and_schedule_sharded(tasks: Sequence[TaskSpec], cost: CostModel,
     per_shard += [[] for _ in range(num_shards - len(per_shard))]
     shards = []
     for subs in per_shard[:num_shards]:
-        lane_of, lane_cost = lpt(subs, lanes_per_shard)
-        shards.append(Schedule(subs, lane_of, lane_cost,
+        allsubs = list(rep_subs) + subs   # identical replicated prefix
+        lane_of, lane_cost = lpt(allsubs, lanes_per_shard)
+        shards.append(Schedule(allsubs, lane_of, lane_cost,
                                base.cost_lower_bound))
-    merge = (cost.merge_cost(num_shards, num_queries)
+    n_merge = num_queries if num_merge_queries is None else num_merge_queries
+    merge = (cost.merge_cost(num_shards, n_merge)
              if num_shards > 1 else 0.0)
     return ShardedSchedule(shards, seq_splits, merge)
 

@@ -57,8 +57,14 @@ class ShardedPageAllocator:
         self.seq_split_pages = int(seq_split_pages)
         self.shards = [PageAllocator(pages_per_shard)
                        for _ in range(num_shards)]
-        # hint (node id) -> [shard, pages placed there since last move]
+        # hint (node id) -> [shard, pages placed there since last move,
+        # live refcount over the hint's rows].  Insertion order doubles
+        # as LRU order: entries are re-appended on every use, and the
+        # size bound only evicts entries whose live count is zero — a
+        # FIFO pop could drop a LIVE node's entry, resetting its
+        # seq_split_pages quota and scattering later growth.
         self._affinity: Dict[int, List[int]] = {}
+        self._row_hint: Dict[int, int] = {}     # global row -> hint
 
     # -- id mapping ---------------------------------------------------- #
     def shard_of(self, row: int) -> int:
@@ -95,12 +101,17 @@ class ShardedPageAllocator:
         return [s.occupancy() for s in self.shards]
 
     # -- alloc / release ------------------------------------------------ #
+    def _touch(self, hint: int) -> None:
+        """LRU-touch: re-append the entry so the size bound sees it last."""
+        self._affinity[hint] = self._affinity.pop(hint)
+
     def _pick(self, hint: Optional[int]) -> int:
         if hint is not None:
             st = self._affinity.get(hint)
             if (st is not None and self.shards[st[0]].num_free > 0
                     and (self.seq_split_pages <= 0
                          or st[1] < self.seq_split_pages)):
+                self._touch(hint)
                 return st[0]
         # next-freest shard, deterministic ties (lowest index); when an
         # affinity key moves on, exclude its current shard so a reached
@@ -118,10 +129,24 @@ class ShardedPageAllocator:
             raise MemoryError(
                 f"KV pool exhausted: need 1, have {self.num_free}")
         if hint is not None:
-            self._affinity[hint] = [best, 0]
-            if len(self._affinity) > 8192:   # stale node ids, bounded
-                self._affinity.pop(next(iter(self._affinity)))
+            st = self._affinity.get(hint)
+            if st is None:
+                self._affinity[hint] = [best, 0, 0]
+            else:
+                st[0], st[1] = best, 0
+                self._touch(hint)
+            self._trim()
         return best
+
+    def _trim(self) -> None:
+        # bound on stale node ids: evict oldest entry with NO live pages
+        # (live entries must keep their quota state — see _affinity)
+        while len(self._affinity) > 8192:
+            dead = next((k for k, v in self._affinity.items() if v[2] == 0),
+                        None)
+            if dead is None:
+                return
+            del self._affinity[dead]
 
     def alloc(self, n: int, hint: Optional[int] = None) -> List[int]:
         if n > self.num_free:
@@ -131,10 +156,50 @@ class ShardedPageAllocator:
         for _ in range(n):
             sh = self._pick(hint)
             local = self.shards[sh].alloc(1)[0]
+            row = sh * self.stride + local
             if hint is not None:
-                self._affinity[hint][1] += 1
-            rows.append(sh * self.stride + local)
+                st = self._affinity[hint]
+                st[1] += 1
+                st[2] += 1
+                self._row_hint[row] = hint
+            rows.append(row)
         return rows
+
+    def alloc_replicas(self, n: int,
+                       hint: Optional[int] = None) -> Dict[int, List[int]]:
+        """Allocate ``n`` pages on EVERY shard (replication placement).
+
+        Returns ``{shard: [global rows]}`` with one ``n``-page run per
+        shard.  All-or-nothing: raises ``MemoryError`` without touching
+        any shard if one of them cannot fit ``n`` pages.  The affinity
+        entry is pinned to the freest shard (the replica the scheduler
+        treats as primary) and its live count covers ALL replica rows,
+        so the entry survives the size bound while any replica lives.
+        """
+        if any(s.num_free < n for s in self.shards):
+            raise MemoryError(
+                f"KV pool exhausted for replication: need {n} pages on "
+                f"each of {self.num_shards} shards, free per shard = "
+                f"{[s.num_free for s in self.shards]}")
+        primary = max(range(self.num_shards),
+                      key=lambda i: (self.shards[i].num_free, -i))
+        out: Dict[int, List[int]] = {}
+        for sh in range(self.num_shards):
+            locals_ = self.shards[sh].alloc(n)
+            out[sh] = [sh * self.stride + lo for lo in locals_]
+        if hint is not None:
+            st = self._affinity.get(hint)
+            if st is None:
+                st = self._affinity[hint] = [primary, 0, 0]
+            else:
+                st[0] = primary
+                self._touch(hint)
+            for rows in out.values():
+                for g in rows:
+                    self._row_hint[g] = hint
+                    st[2] += 1
+            self._trim()
+        return out
 
     def _by_shard(self, rows: List[int]) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {}
@@ -148,10 +213,23 @@ class ShardedPageAllocator:
     def retain(self, rows: List[int]) -> None:
         for sh, locals_ in self._by_shard(rows).items():
             self.shards[sh].retain(locals_)
+        for g in rows:
+            h = self._row_hint.get(g)
+            if h is not None and h in self._affinity:
+                self._affinity[h][2] += 1
 
     def release(self, rows: List[int]) -> None:
         for sh, locals_ in self._by_shard(rows).items():
             self.shards[sh].release(locals_)
+        for g in rows:
+            h = self._row_hint.get(g)
+            if h is None:
+                continue
+            if self.local_of(g) not in self.shards[self.shard_of(g)]._refs:
+                del self._row_hint[g]     # row fully freed
+            st = self._affinity.get(h)
+            if st is not None:
+                st[2] = max(0, st[2] - 1)
 
     def check(self) -> None:
         """Per-shard structural invariants (tests call after workloads)."""

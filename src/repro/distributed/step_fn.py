@@ -8,9 +8,14 @@ sampling — traces as ONE donated program under ``shard_map`` over a
 
 * **data axis** — KV pages (and so plan subtasks) are sharded; every
   device runs its own shard's plan over its local pool block and the
-  per-query partials are merged with the psum/all_gather-free POR
-  butterfly (``kernels.por.por_allmerge``).  A node sequence-split
-  across data shards is merged by exactly the same reduction.
+  per-query partials of rows whose KV spans shards are packed and
+  merged with the psum/all_gather-free sparse POR butterfly
+  (``kernels.por.por_subgroup_merge`` — one packed ppermute per round
+  over the minimal contributing subgroup).  Rows served entirely by
+  replicated nodes are computed bitwise identically on every shard and
+  never cross the wire; when no row needs merging the collective is
+  absent from the compiled program.  A node sequence-split across data
+  shards is merged by exactly the same reduction.
 * **model axis** — KV heads are sharded (TP-aligned): each device
   slices its head block out of the (replicated-weight) q/k/v
   projections, attends with its local heads, and the output
@@ -69,7 +74,15 @@ class ShardedStepBase(NamedTuple):
     tail_page: jnp.ndarray   # (D, B) int32 LOCAL tail page row (else trash)
     tail_base: jnp.ndarray   # (B,) int32 abs position of the page's slot 0
     tail_off0: jnp.ndarray   # (B,) int32 in-page slot written at delta=0
-    tail_owner: jnp.ndarray  # (D, B) bool — this shard owns the row's tail
+    tail_owner: jnp.ndarray  # (D, B) bool — shard holds the row's tail
+    #                          (one-hot per row; ALL shards for a
+    #                          replicated leaf, whose tail page is that
+    #                          shard's local replica)
+    # sparse cross-shard merge (Bm is in the jit signature; Bm=0 skips
+    # the collective entirely — fully-replicated epochs pay no wire):
+    merge_gather: jnp.ndarray   # (Bm,) int32 rows to pack (pad 0)
+    merge_scatter: jnp.ndarray  # (Bm,) int32 scatter target (pad B -> drop)
+    contrib: jnp.ndarray        # (D,) bool — shards with local partials
 
 
 def make_sharded_step_fn(cfg: ModelConfig, backend,
@@ -152,8 +165,21 @@ def make_sharded_step_fn(cfg: ModelConfig, backend,
                 l_t = jnp.where(own[:, None], l_t, 0.0)
                 o_t = jnp.where(own[:, None, None], o_t, 0.0)
                 o, m, l = ref_mod.por_ref(o_f, m_f, l_f, o_t, m_t, l_t)
-                # cross-device sequence merge: butterfly POR over data
-                o, m, l = por_mod.por_allmerge(o, m, l, "data", D)
+                # sparse cross-device sequence merge: only rows whose KV
+                # actually spans shards are packed and sent through the
+                # subgroup butterfly; fully-replicated / single-shard
+                # rows were computed bitwise identically everywhere and
+                # skip the wire.  Bm == 0 drops the collective from the
+                # program altogether.
+                Bm = base.merge_gather.shape[0]
+                if D > 1 and Bm > 0:
+                    gi = base.merge_gather
+                    og, mg, lg = por_mod.por_subgroup_merge(
+                        o[gi], m[gi], l[gi], "data", D, base.contrib)
+                    si = base.merge_scatter
+                    o = o.at[si].set(og, mode="drop")
+                    m = m.at[si].set(mg, mode="drop")
+                    l = l.at[si].set(lg, mode="drop")
                 o_flat = o.astype(q_loc.dtype).reshape(B, 1, hq_loc * hd)
                 if heads_sharded:
                     # TP epilogue: partial output projection, psum(model)
@@ -183,7 +209,8 @@ def make_sharded_step_fn(cfg: ModelConfig, backend,
 
     pool_spec = paged_pool_spec(mesh, hkv)
     state_spec = StepState(pool_spec, pool_spec, P(), P())
-    base_spec = ShardedStepBase(P(), P(), P("data"), P(), P(), P("data"))
+    base_spec = ShardedStepBase(P(), P(), P("data"), P(), P(), P("data"),
+                                P(), P(), P())
     fn = shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), state_spec, P(), P(), base_spec, P(), P("data")),

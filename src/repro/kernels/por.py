@@ -82,9 +82,13 @@ def por_allmerge(o: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
     ``all_gather`` (an LSE merge is not a sum, so ``psum`` cannot
     express it, and gathering all partials would move ``axis_size``
     copies instead of ``log2``).  After the last round every device
-    holds the full merge **bitwise identically**: the pairwise POR is
-    commutative at float level (``max`` and two-term adds commute
-    bitwise), so XOR partners compute equal results each round.
+    holds the full merge identically in max space (``m`` — pure
+    ``maximum`` commutes bitwise) and to one FMA slot asymmetry in
+    ``o``/``l``: XLA fuses ``o1*a1 + o2*a2`` as
+    ``fma(o_local, a_local, o_recv*a_recv)``, and the local/received
+    operand roles swap between XOR partners, so the two sides round
+    once differently (±1 ulp).  Sampling consumes device 0's logits
+    (replicated out-spec), so token streams stay deterministic.
 
     Requires ``axis_size`` to be a power of two (mesh data axes are).
     Partials over disjoint KV slices are exactly what this merges — each
@@ -104,3 +108,75 @@ def por_allmerge(o: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
         o, m, l = ref_mod.por_ref(o, m, l, o2, m2, l2)
         shift *= 2
     return o, m, l
+
+
+def _pack(o: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([o, m[..., None], l[..., None]], axis=-1)
+
+
+def _unpack(p: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return p[..., :-2], p[..., -2], p[..., -1]
+
+
+def por_subgroup_merge(o: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
+                       axis_name: str, axis_size: int,
+                       contrib: jnp.ndarray,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sparse POR merge over the minimal subgroup of contributing shards.
+
+    Same result contract as :func:`por_allmerge` — after the call every
+    device on the axis holds the merged partials (bitwise in max space,
+    to FMA slot asymmetry in ``o``/``l``, and **bitwise verbatim** when
+    a single shard contributes) — but with two cost improvements for
+    the sparse sharded-decode case:
+
+    * **one packed transfer per round**: ``(o, m, l)`` ride in a single
+      ``(rows, h, d + 2)`` f32 buffer, so each butterfly round issues
+      ONE ``ppermute`` (and pays one launch) instead of three;
+    * **subgroup rounds**: ``contrib`` is a traced ``(axis_size,)`` bool
+      vector marking the shards that hold non-identity partials for the
+      packed rows (from the plan's ownership mask).  With contributors
+      confined to an aligned block of ``2^k`` devices, only the first
+      ``k`` rounds are *merge* rounds (ppermute + pairwise POR inside
+      the block); the remaining ``log2(axis_size) - k`` rounds degrade
+      to *copy* rounds — the block's finished result is forwarded
+      verbatim (``where`` select, no float math), doubling the holder
+      set each round until the axis is covered.  Copy rounds move the
+      same bytes but skip the POR FLOPs and, crucially, are bitwise
+      round-trips, so devices with no contribution introduce zero float
+      perturbation.
+
+    The round structure is selected with traced predicates (anchor =
+    first contributor, ``xall`` = OR-fold of ``id XOR anchor`` over
+    contributors; round ``s`` merges iff ``xall >= s``), so ONE compiled
+    program serves every ownership pattern — the mask does not enter
+    the jit signature.  Devices outside the contributor block feed
+    identity partials (``m = MASK, l = 0``) into nothing: their rows
+    are overwritten by the copy cascade.
+
+    Requires ``axis_size`` to be a power of two (mesh data axes are).
+    """
+    if axis_size <= 1:
+        return o, m, l
+    if axis_size & (axis_size - 1):
+        raise ValueError(f"por_subgroup_merge needs a power-of-two axis, "
+                         f"got {axis_size}")
+    c = contrib.astype(jnp.int32)
+    ids = jnp.arange(axis_size, dtype=jnp.int32)
+    anchor = jnp.argmax(c).astype(jnp.int32)   # first contributor (0 if none)
+    xall = jnp.max(jnp.where(c > 0, ids ^ anchor, 0))
+    me = jax.lax.axis_index(axis_name)
+    packed = _pack(o, m, l)
+    shift = 1
+    while shift < axis_size:
+        perm = [(i, i ^ shift) for i in range(axis_size)]
+        recv = jax.lax.ppermute(packed, axis_name, perm)
+        og, mg, lg = ref_mod.por_ref(*_unpack(packed), *_unpack(recv))
+        merged = _pack(og, mg, lg)
+        # copy round: anchor's aligned shift-block already holds the
+        # finished merge; its XOR partners receive it verbatim
+        have = (me // shift) == (anchor // shift)
+        copied = jnp.where(have, packed, recv)
+        packed = jnp.where(xall >= shift, merged, copied)
+        shift *= 2
+    return _unpack(packed)

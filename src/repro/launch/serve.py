@@ -81,6 +81,15 @@ def main() -> int:
                     help="placement quota: pages a node keeps on one "
                          "data shard before sequence-splitting to the "
                          "next (0 = split only when a shard fills)")
+    ap.add_argument("--replicate", action="store_true",
+                    help="replication-aware placement: copy hot short "
+                         "prefix nodes onto every data shard when the "
+                         "merge saving beats the extra read cost, so "
+                         "their rows skip the cross-shard POR merge")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the cost model's bandwidth/overhead "
+                         "coefficients from measured sharded step times "
+                         "(blocks each dispatch to time it)")
     ap.add_argument("--cache", action="store_true",
                     help="persistent cross-request prefix cache: finished "
                          "requests detach but their prefix KV stays "
@@ -153,6 +162,8 @@ def main() -> int:
                            max_running=args.max_running,
                            fused=args.fused, mesh=mesh,
                            seq_split_pages=args.seq_split_pages,
+                           replicate=args.replicate,
+                           calibrate=args.calibrate,
                            speculative=spec, cache=cache_policy)
         first_tok = {}
 
@@ -210,6 +221,18 @@ def main() -> int:
                           for sp in eng._sharded_plans.values()),
                          default=0)
             shard_occ += f", {splits} seq-split nodes (last plan)"
+            last_sp = next(iter(eng._sharded_plans.values()), None)
+            if last_sp is not None:
+                ls = last_sp.stats()
+                shard_occ += (f", {ls['replicated_nodes']} replicated "
+                              f"nodes / {ls['merge_row_count']} merge "
+                              f"rows (last plan)")
+            if eng.cost_model.calibrated:
+                hw = eng.cost_model.hw
+                shard_occ += (f" | calibrated hw: hbm "
+                              f"{hw.hbm_bw / 1e9:.0f} GB/s, ici "
+                              f"{hw.ici_bw / 1e9:.1f} GB/s "
+                              f"({st['calibrations']} fits)")
         print(f"    memory pressure: peak {peak}/{eng.pool.num_pages} pages "
               f"({100 * peak / eng.pool.num_pages:.0f}%), "
               f"{st['preempted']} preemptions, {st['reclaimed']} reclaims, "

@@ -162,6 +162,7 @@ class DecodeEngine:
                  max_running: Optional[int] = None,
                  fused: bool = False,
                  mesh=None, seq_split_pages: int = 0,
+                 replicate: bool = False, calibrate: bool = False,
                  speculative=None, cache=None):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
@@ -243,6 +244,16 @@ class DecodeEngine:
             self.pool = PagedKVPool(max(n_attn, 1), num_pages, page_size,
                                     max(cfg.num_kv_heads, 1),
                                     max(cfg.head_dim, 1))
+        # ---- replication-aware placement + measured-cost calibration -- #
+        # replicate=True lets the sharded epoch copy hot short prefix
+        # nodes onto EVERY data shard (extra pages instead of merge
+        # wire — CostModel.replicate_gain decides per node); calibrate=
+        # True blocks each dispatch to measure it and refits the cost
+        # model's hardware coefficients from step_stats at plan epochs.
+        self.replicate = bool(replicate) and mesh is not None \
+            and mesh.shape["data"] > 1
+        self.calibrate = bool(calibrate)
+        self._epoch_features: Dict[str, float] = {}
         self.forest = tree_mod.PrefixForest(page_size)
         # splitting a pinned node must extend each waiting holder's pin
         # list over the new lower half (see _on_split_pins)
@@ -293,7 +304,8 @@ class DecodeEngine:
                       "prefill_stalls": 0, "fused_calls": 0,
                       "token_flushes": 0, "spec_steps": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
-                      "spec_draft_stalls": 0}
+                      "spec_draft_stalls": 0, "calibrations": 0,
+                      "replica_promotions": 0, "replica_demotions": 0}
         self.step_stats: List[Dict] = []
         self._decode_timing: Dict[str, float] = {}
 
@@ -528,8 +540,7 @@ class DecodeEngine:
             if "touch" not in node.meta:
                 self.cache.stamp(node)
             return
-        if node.page_ids:
-            self.pool.allocator.release(node.page_ids)
+        self._release_node_pages(node)
         parent = self.forest.nodes[node.parent]
         parent.children.remove(node.id)
         del self.forest.nodes[node.id]
@@ -580,8 +591,7 @@ class DecodeEngine:
                 node.meta["pins"] = node.meta.get("pins", 0) + 1
                 pinned.append(node.id)
             else:
-                if node.page_ids:
-                    self.pool.allocator.release(node.page_ids)
+                self._release_node_pages(node)
                 parent = self.forest.nodes[node.parent]
                 parent.children.remove(node.id)
                 del self.forest.nodes[node.id]
@@ -612,7 +622,7 @@ class DecodeEngine:
             if others or kids or node.meta.get("pins", 0) > 0:
                 continue
             freeable.add(node.id)
-            n += len(node.page_ids)
+            n += self._node_total_pages(node)
         return n
 
     def _reclaim_one(self, exclude: Set[int],
@@ -655,6 +665,15 @@ class DecodeEngine:
                     if nid not in self.forest.nodes:
                         self.stats["reclaimed"] += 1
                         return True
+        # demote a replicated node (widest first): frees (D-1)/D of its
+        # pages without touching any request — always cheaper than
+        # preemption, and the plan rebuild re-derives the merge mask
+        repl = [n for n in self.forest.nodes.values()
+                if "replicas" in n.meta]
+        if repl:
+            self._demote_replicas(max(repl, key=lambda n: len(n.page_ids)))
+            self.stats["reclaimed"] += 1
+            return True
         if not allow_preempt:
             return False
         victims = [r for r in sorted(self.requests)
@@ -676,6 +695,21 @@ class DecodeEngine:
         refcount to the lower half; the per-request pin *lists* must
         follow, or un-pinning at re-admission would strand the lower
         half pinned forever."""
+        # a replicated node splits every replica run at the same page
+        # boundary (``tree._split`` already cut ``page_ids``, which hold
+        # the primary's rows — the other shards' runs must follow, or
+        # the lower half would alias the upper's replica pages)
+        reps = upper.meta.get("replicas")
+        if reps is not None:
+            cut = len(upper.page_ids)
+            prim = upper.meta["replica_primary"]
+            lower.meta["replicas"] = {s: lst[cut:]
+                                      for s, lst in reps.items()}
+            upper.meta["replicas"] = {s: lst[:cut]
+                                      for s, lst in reps.items()}
+            lower.meta["replica_primary"] = prim
+            upper.page_ids = list(upper.meta["replicas"][prim])
+            lower.page_ids = list(lower.meta["replicas"][prim])
         if upper.meta.get("pins", 0) <= 0:
             return
         for req in self.requests.values():
@@ -686,9 +720,8 @@ class DecodeEngine:
         """Evict one cached leaf: release its pages and unlink it (the
         parent becomes a future candidate under its own touch stamp)."""
         self.cache.stats["evicted_nodes"] += 1
-        self.cache.stats["evicted_pages"] += len(node.page_ids)
-        if node.page_ids:
-            self.pool.allocator.release(node.page_ids)
+        self.cache.stats["evicted_pages"] += self._node_total_pages(node)
+        self._release_node_pages(node)
         parent = self.forest.nodes[node.parent]
         parent.children.remove(node.id)
         del self.forest.nodes[node.id]
@@ -772,6 +805,156 @@ class DecodeEngine:
         return self.pool.allocator.alloc(n, hint=hint)
 
     # ------------------------------------------------------------------ #
+    # replication-aware placement (mesh mode): hot short prefix nodes
+    # are copied onto EVERY data shard so their rows skip the cross-
+    # shard POR merge entirely (core.plan.replicated_node_set decides
+    # which rows actually may — a row must be replicated along its WHOLE
+    # path, or the merge would LSE-double-count the shared partials)
+    # ------------------------------------------------------------------ #
+    def _node_total_pages(self, node) -> int:
+        """Pool pages the node holds across all shards (replica-aware)."""
+        reps = node.meta.get("replicas")
+        if reps is not None:
+            return sum(len(v) for v in reps.values())
+        return len(node.page_ids)
+
+    def _release_node_pages(self, node) -> None:
+        """Release every page the node holds (all replicas, or the
+        single placement).  ``page_ids`` aliases the primary replica run,
+        so replicated nodes must NOT release it separately."""
+        reps = node.meta.pop("replicas", None)
+        node.meta.pop("replica_primary", None)
+        if reps is not None:
+            for rws in reps.values():
+                self.pool.allocator.release(rws)
+        elif node.page_ids:
+            self.pool.allocator.release(node.page_ids)
+        node.page_ids = []
+
+    def _promote_replicas(self, node) -> bool:
+        """Copy a node's KV onto every shard and free its old placement.
+
+        The old pages may be released immediately after the (value-
+        semantics) device copy: nothing in the engine retains node pages
+        beyond the node itself, so their refcount is 1 by construction.
+        """
+        alloc = self.pool.allocator
+        D = self.pool.num_shards
+        n = len(node.page_ids)
+        # same tie-break as alloc_replicas' affinity pin
+        primary = max(range(D),
+                      key=lambda i: (alloc.shards[i].num_free, -i))
+        try:
+            reps = alloc.alloc_replicas(n, hint=node.id)
+        except MemoryError:
+            return False
+        src = np.asarray(node.page_ids, np.int64)
+        dst = np.concatenate([np.asarray(reps[s], np.int64)
+                              for s in range(D)])
+        srcs = np.tile(src, D)
+        self.pool.k = self.pool.k.at[:, dst].set(self.pool.k[:, srcs])
+        self.pool.v = self.pool.v.at[:, dst].set(self.pool.v[:, srcs])
+        alloc.release(node.page_ids)
+        node.meta["replicas"] = reps
+        node.meta["replica_primary"] = primary
+        node.page_ids = list(reps[primary])
+        self.stats["replica_promotions"] += 1
+        self._plan_dirty = True
+        return True
+
+    def _demote_replicas(self, node) -> None:
+        """Back to single placement: keep the primary run, free the rest.
+        The running plan's page remaps reference the freed rows, so the
+        plan is marked dirty and rebuilt before the next dispatch."""
+        reps = node.meta.pop("replicas", None)
+        if reps is None:
+            return
+        primary = node.meta.pop("replica_primary")
+        for s, rws in reps.items():
+            if s != primary:
+                self.pool.allocator.release(rws)
+        node.page_ids = list(reps[primary])
+        self.stats["replica_demotions"] += 1
+        self._plan_dirty = True
+
+    def _replication_sweep(self, rows: List[int]) -> None:
+        """Promote nodes whose merge saving beats their extra read cost
+        (``CostModel.replicate_gain``), headroom permitting: each shard
+        must fit the node AND a page of tail growth per active row."""
+        alloc = self.pool.allocator
+        D = self.pool.num_shards
+        rowset = set(rows)
+        seen: Set[int] = set()
+        for r in rows:
+            for node in self.forest.path(r):
+                if node.id in seen:
+                    continue
+                seen.add(node.id)
+                if (not node.page_ids or "replicas" in node.meta
+                        or node.meta.get("draft")):
+                    continue
+                n_q = sum(1 for q in node.requests if q in rowset)
+                if n_q == 0:
+                    continue
+                if self.cost_model.replicate_gain(n_q, node.length, D) <= 0:
+                    continue
+                n = len(node.page_ids)
+                if min(s.num_free for s in alloc.shards) < n + len(rows):
+                    continue
+                self._promote_replicas(node)
+
+    def _grow_node_pages(self, node, k: int,
+                         exclude: Set[int]) -> Optional[List[int]]:
+        """Grow a node by ``k`` pages, replica-aware: replicated nodes
+        grow on every shard (all-or-nothing), demoting to the primary
+        placement when some shard cannot fit — the ordinary reclaiming
+        allocator then takes over.  Returns the primary's new rows."""
+        reps = node.meta.get("replicas")
+        if reps is not None:
+            try:
+                new = self.pool.allocator.alloc_replicas(k, hint=node.id)
+            except MemoryError:
+                self._demote_replicas(node)
+            else:
+                for s, rws in new.items():
+                    reps[s].extend(rws)
+                primary = node.meta["replica_primary"]
+                node.page_ids = list(reps[primary])
+                return new[primary]
+        got = self._alloc_pages(k, exclude, hint=node.id)
+        if got is not None:
+            node.page_ids += got
+        return got
+
+    # ------------------------------------------------------------------ #
+    # measured-cost calibration: refit the cost model's hardware
+    # coefficients from the step timings already in ``step_stats``
+    # ------------------------------------------------------------------ #
+    def recalibrate(self, min_samples: int = 8) -> bool:
+        """Fit ``CostModel`` coefficients from measured sharded steps.
+
+        Mesh steps record their plan's feature counts (``hbm_bytes``,
+        ``grid_steps``, ``merge_bytes``, ``merge_rounds``) next to the
+        measured ``dispatch_time`` (which, under ``calibrate=True``,
+        blocks on the device and is the true step wall time).  The fit
+        replaces datasheet bandwidths/overheads, so subsequent division,
+        lane balancing and replicate-vs-split decisions use measured
+        costs.  Steps that hit a compile or an epoch replan are orders
+        of magnitude above the steady state and would poison the
+        regression, so samples beyond 5x the median step time are
+        rejected first.  Returns True when a fit was installed."""
+        samples = [{**s, "seconds": s["dispatch_time"]}
+                   for s in self.step_stats
+                   if s.get("hbm_bytes") and s.get("dispatch_time", 0) > 0]
+        if samples:
+            med = float(np.median([s["seconds"] for s in samples]))
+            samples = [s for s in samples if s["seconds"] <= 5.0 * med]
+        if self.cost_model.fit(samples, min_samples=min_samples):
+            self.stats["calibrations"] += 1
+            return True
+        return False
+
+    # ------------------------------------------------------------------ #
     # prefill with prefix reuse (chunked, resumable)
     # ------------------------------------------------------------------ #
     def _ensure_pages_upto(self, rid: int, upto: int) -> bool:
@@ -781,11 +964,11 @@ class DecodeEngine:
             cover = min(node.length, max(0, upto - node.start_pos))
             need = -(-cover // self.page_size)
             if len(node.page_ids) < need:
-                got = self._alloc_pages(need - len(node.page_ids),
-                                        exclude={rid}, hint=node.id)
+                got = self._grow_node_pages(node,
+                                            need - len(node.page_ids),
+                                            exclude={rid})
                 if got is None:
                     return False
-                node.page_ids += got
         return True
 
     def _gather_prefix_upto(self, layer_attn: int, path, upto: int) -> Tuple:
@@ -950,10 +1133,16 @@ class DecodeEngine:
             start = node.meta.get("filled", 0)
             base = node.start_pos - span_start   # span-local index of token 0
             t_hi = hi - base
+            # a replicated node's KV lands in EVERY shard's replica run
+            # (same source row scattered to each), keeping replicas
+            # bitwise in sync with the primary
+            reps = node.meta.get("replicas")
+            page_lists = list(reps.values()) if reps else [node.page_ids]
             for t in range(max(start, lo - base), t_hi):
-                pages.append(node.page_ids[t // ps])
-                offs.append(t % ps)
-                kv_rows.append(base + t)
+                for pl in page_lists:
+                    pages.append(pl[t // ps])
+                    offs.append(t % ps)
+                    kv_rows.append(base + t)
             if t_hi > start:
                 node.meta["filled"] = t_hi
         if kv_rows:
@@ -1146,12 +1335,11 @@ class DecodeEngine:
         commit so their growth/eviction behaviour can never diverge."""
         leaf = self.forest.nodes[self.forest.leaf_of[r]]
         if -(-leaf.length // self.page_size) > len(leaf.page_ids):
-            got = self._alloc_pages(1, exclude={r}, hint=leaf.id)
+            got = self._grow_node_pages(leaf, 1, exclude={r})
             if got is None:
                 raise MemoryError(
                     f"KV pool exhausted growing request {r}: nothing "
                     f"left to evict (pool smaller than the working set)")
-            leaf.page_ids += got
         return leaf
 
     def _append_pending(self, rows0: List[int]) -> None:
@@ -1335,6 +1523,10 @@ class DecodeEngine:
         toks_dev, self.key, state = self._step_fn(
             self.params, state, tok_in, self.key, self._fused_base,
             np.int32(self._fused_delta), self._fused_prepared)
+        if self.calibrate and self.mesh is not None:
+            # calibration fits against TRUE step seconds, so the async
+            # dispatch must block here (costs the overlap; opt-in)
+            jax.block_until_ready(toks_dev)
         dispatch = time.perf_counter() - t_d0
         self.pool.k, self.pool.v = state.pool_k, state.pool_v
         self._mamba_carry = (state.conv, state.ssm)
@@ -1358,6 +1550,8 @@ class DecodeEngine:
         self.stats["fused_calls"] += 1
         self.stats["decode_dispatch_time"] += dispatch
         self._decode_timing = {"dispatch_time": dispatch}
+        if self.mesh is not None and self._epoch_features:
+            self._decode_timing.update(self._epoch_features)
         if done_any:
             # completion boundary: finished streams must be readable
             self.flush_tokens()
@@ -1444,6 +1638,12 @@ class DecodeEngine:
         ps = self.page_size
         D = self.pool.num_shards
         stride = self.pool.page_stride
+        if self.replicate:
+            self._replication_sweep(rows)
+        if self.calibrate:
+            # refit hardware coefficients from the measured steps so the
+            # plans built below divide/balance/replicate on real costs
+            self.recalibrate()
         self.pool.canonicalize()
         prepared = []
         sig: List = [("mesh", D, self.mesh.shape["model"], bucket)]
@@ -1461,7 +1661,19 @@ class DecodeEngine:
             sig.append((w,) + tuple(tuple(a.shape)
                                     for a in jax.tree.leaves(pr)))
         self._fused_prepared = tuple(prepared)
-        self.bucket_signatures.add(tuple(sig))
+
+        # sparse-merge bookkeeping: which rows must cross the wire, and
+        # which shards hold a shard-local contribution to them (all
+        # windows OR together — one contrib vector serves every layer)
+        row_sh = np.zeros((D, bucket), bool)
+        merge_mask = np.zeros(bucket, bool)
+        rep_set: Set[int] = set()
+        for sp in self._sharded_plans.values():
+            if sp.row_shards is not None:
+                row_sh |= sp.row_shards
+            if sp.merge_rows is not None:
+                merge_mask |= sp.merge_rows
+            rep_set |= sp.replicated or set()
 
         valid = np.zeros(bucket, bool)
         valid[:B] = True
@@ -1474,16 +1686,108 @@ class DecodeEngine:
             q_pos0[i] = self.forest.context_len(r) - 1
             leaf = self.forest.nodes[self.forest.leaf_of[r]]
             tp = (leaf.length - 1) // ps
-            g = leaf.page_ids[tp]
-            sh = self.pool.shard_of(g)
-            tail_page[sh, i] = self.pool.local_of(g)
-            tail_owner[sh, i] = True
+            reps = leaf.meta.get("replicas")
+            if reps is not None:
+                # every shard writes the row's new KV into its OWN
+                # replica tail page, keeping replicas bitwise in sync;
+                # ownership (whose tail partial counts) depends on
+                # whether the row merges: fully-replicated rows own
+                # everywhere (identical results), merge rows own only on
+                # the primary (one contribution on the wire)
+                for sh in range(D):
+                    g = reps[sh][tp]
+                    tail_page[sh, i] = self.pool.local_of(g)
+                if leaf.id in rep_set:
+                    tail_owner[:, i] = True
+                else:
+                    sh = self.pool.shard_of(leaf.page_ids[tp])
+                    tail_owner[sh, i] = True
+                    row_sh[sh, i] = True
+            else:
+                g = leaf.page_ids[tp]
+                sh = self.pool.shard_of(g)
+                tail_page[sh, i] = self.pool.local_of(g)
+                tail_owner[sh, i] = True
+                row_sh[sh, i] = True
             tail_base[i] = leaf.start_pos + tp * ps
             tail_off0[i] = (leaf.length - 1) % ps
+
+        # packed gather/scatter for the sparse subgroup merge: Bm is part
+        # of the compiled signature (bucketed pow2; 0 drops the
+        # collective), the mask VALUES are not — one program per shape
+        mrows = np.nonzero(merge_mask)[0]
+        Bm = plan_mod.bucket_pow2(len(mrows)) if len(mrows) else 0
+        gather = np.zeros(Bm, np.int32)
+        scatter = np.full(Bm, bucket, np.int32)    # pad -> drop
+        gather[:len(mrows)] = mrows
+        scatter[:len(mrows)] = mrows
+        contrib = (row_sh[:, merge_mask].any(axis=1) if Bm
+                   else np.zeros(D, bool))
+        sig.append(("merge", Bm))
+        self.bucket_signatures.add(tuple(sig))
         self._fused_base = sharded_step_fn_mod.ShardedStepBase(
             jnp.asarray(valid), jnp.asarray(q_pos0),
             jnp.asarray(tail_page), jnp.asarray(tail_base),
-            jnp.asarray(tail_off0), jnp.asarray(tail_owner))
+            jnp.asarray(tail_off0), jnp.asarray(tail_owner),
+            jnp.asarray(gather), jnp.asarray(scatter),
+            jnp.asarray(contrib))
+        self._record_epoch_features(Bm)
+
+    def _record_epoch_features(self, merge_bucket: int) -> None:
+        """Per-step cost-model features of the new epoch, attached to
+        every step_stats row until the next epoch (``recalibrate`` fits
+        hardware coefficients against them).  Compute terms take the
+        heaviest shard's totals over its parallel lanes — the same
+        makespan proxy the scheduler optimises."""
+        ps = self.page_size
+        lanes = max(self.num_lanes, 1)
+        n_attn_w = {w: 0 for w in self._windows()}
+        for kind, _ in self.layers:
+            if kind.mixer in ("attn", "attn_local"):
+                w = (self.cfg.sliding_window if kind.mixer == "attn_local"
+                     else 0)
+                n_attn_w[w] += 1
+        hbm = steps = 0.0
+        for w, sp in self._sharded_plans.items():
+            per_shard = [sum(self.cost_model.hbm_bytes(s.n_q, s.n)
+                             for s in p.subtasks) for p in sp.shards]
+            per_steps = [sum(max(1, -(-s.n // ps)) for s in p.subtasks)
+                         for p in sp.shards]
+            if not per_shard:
+                continue
+            k = int(np.argmax(per_shard))
+            hbm += n_attn_w[w] * per_shard[k] / lanes
+            steps += n_attn_w[w] * per_steps[k] / lanes
+        D = self.pool.num_shards
+        rounds = (int(np.ceil(np.log2(D)))
+                  if D > 1 and merge_bucket > 0 else 0)
+        n_attn = sum(n_attn_w.values())
+        wire = (merge_bucket * self.cfg.num_heads
+                * (self.cfg.head_dim + 2) * 4)
+        self._epoch_features = {
+            "hbm_bytes": hbm, "grid_steps": steps,
+            "merge_bytes": n_attn * rounds * wire,
+            "merge_rounds": n_attn * rounds,
+        }
+
+    def predicted_step_seconds(self, hw=None) -> float:
+        """Model-predicted per-step attention + merge seconds for the
+        current epoch on a real mesh: the heaviest shard's HBM/grid time
+        plus the cross-shard merge wire/launch terms, under ``hw`` (by
+        default the current, possibly :meth:`recalibrate`-fitted,
+        hardware coefficients — pass a fixed :class:`HardwareSpec` when
+        comparing across engines).  Excludes the dense
+        (FFN/unembed/dispatch) base cost, which is
+        device-count-independent — callers compare or offset it against
+        a measured single-device step."""
+        f = self._epoch_features
+        if not f:
+            return 0.0
+        hw = hw or self.cost_model.hw
+        return (f["hbm_bytes"] / hw.hbm_bw
+                + f["grid_steps"] * hw.grid_step_overhead
+                + f["merge_bytes"] / hw.ici_bw
+                + f["merge_rounds"] * hw.launch_overhead)
 
     def _sync_mamba_state(self) -> None:
         """Scatter the batched device SSM state back into the per-request

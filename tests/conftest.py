@@ -31,6 +31,21 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Drop compiled executables between test modules.
+
+    A full-suite run accumulates several hundred jitted programs in one
+    process; around the ~300th compilation the XLA CPU backend segfaults
+    inside ``backend_compile`` (LLVM JIT state, not our code — the same
+    test passes in isolation and in any smaller module subset).  Clearing
+    the executable caches at module boundaries keeps the process under
+    that threshold without changing per-module compile-count assertions.
+    """
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,268 @@
+"""Cost-model calibration + sharded performance-model fixes (PR 7).
+
+Regression coverage for the sharded-decode performance model:
+
+* ``CostModel._interp`` on degenerate profiled tables (1-row / 1-column
+  grids) — the old ``np.clip(searchsorted - 1, 0, -1)`` relied on
+  numpy's undefined min>max clip plus negative-index wrapping;
+* packed merge-cost accounting: one launch + one wire move per
+  butterfly round, matching ``por_subgroup_merge``;
+* ``CostModel.fit`` recovering planted hardware coefficients from
+  synthetic step timings (and leaving non-varying columns alone);
+* ``replicate_gain`` preferring replication for hot short prefixes and
+  sequence splitting for long documents;
+* the sharded scheduler charging the ICI merge exactly once (the old
+  per-piece surcharge double-counted it);
+* ``ShardedPageAllocator`` affinity entries of LIVE nodes surviving the
+  size bound (the old FIFO pop reset their ``seq_split_pages`` quota).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel, HardwareSpec
+from repro.core.scheduler import TaskSpec, divide_and_schedule_sharded
+from repro.distributed.kv_pool import ShardedPageAllocator
+
+
+# --------------------------------------------------------------------- #
+# _interp on degenerate profiled grids
+# --------------------------------------------------------------------- #
+class _NoNegativeIndex(np.ndarray):
+    """ndarray that rejects negative integer indices — catches clamp
+    logic that only 'works' through Python's index wrapping."""
+
+    def __getitem__(self, idx):
+        for k in (idx if isinstance(idx, tuple) else (idx,)):
+            if isinstance(k, (int, np.integer)) and k < 0:
+                raise AssertionError(
+                    f"negative index {k!r} into the interpolation grid")
+        return super().__getitem__(idx)
+
+
+def _guard(cm: CostModel) -> CostModel:
+    lnq, ln, vals = cm._grid
+    cm._grid = (lnq, ln, vals.view(_NoNegativeIndex))
+    return cm
+
+
+def test_interp_single_cell_table():
+    cm = _guard(CostModel(8, 2, 64, page_size=8, table={(4, 512): 3e-3}))
+    # 1x1 grid: every query degrades to the single measured value
+    for nq, n in ((1, 64), (4, 512), (64, 65536)):
+        assert cm(nq, n) == pytest.approx(3e-3)
+
+
+def test_interp_single_row_and_column_tables():
+    # one n_q value, two n values: pure 1-D interpolation along n
+    cm = _guard(CostModel(8, 2, 64, page_size=8,
+                          table={(4, 512): 1e-3, (4, 2048): 2e-3}))
+    assert cm(4, 512) == pytest.approx(1e-3)
+    assert cm(4, 2048) == pytest.approx(2e-3)
+    assert cm(4, 1024) == pytest.approx(1.5e-3)     # log2 midpoint
+    assert cm(1, 512) == pytest.approx(1e-3)        # clamped in n_q
+    assert cm(64, 4096) == pytest.approx(2e-3)      # clamped in n
+    # one n value, two n_q values: 1-D along n_q
+    cm = _guard(CostModel(8, 2, 64, page_size=8,
+                          table={(2, 512): 1e-3, (8, 512): 3e-3}))
+    assert cm(4, 512) == pytest.approx(2e-3)        # log2 midpoint
+    assert cm(16, 64) == pytest.approx(3e-3)        # clamped both ways
+
+
+def test_interp_full_grid_never_indexes_negative():
+    table = {(nq, n): 1e-4 * nq * n / 512
+             for nq in (1, 4, 16) for n in (512, 2048)}
+    cm = _guard(CostModel(8, 2, 64, page_size=8, table=table))
+    # corners, interior, and far outside the grid on both axes
+    for nq in (1, 2, 3, 16, 128):
+        for n in (1, 512, 1000, 2048, 1 << 20):
+            assert np.isfinite(cm(nq, n)) and cm(nq, n) > 0
+
+
+# --------------------------------------------------------------------- #
+# packed merge accounting: one launch + one transfer per round
+# --------------------------------------------------------------------- #
+def test_merge_cost_single_launch_per_round():
+    hw = HardwareSpec(ici_bw=50e9, launch_overhead=5e-6)
+    cm = CostModel(8, 2, 64, page_size=8, hw=hw)
+    wire = 16 * 8 * (64 + 2) * 4        # packed (o, m, l) f32 buffer
+    for splits, rounds in ((2, 1), (4, 2), (8, 3)):
+        expect = rounds * (wire / hw.ici_bw + hw.launch_overhead)
+        assert cm.merge_cost(splits, 16) == pytest.approx(expect)
+    # the launch term is per ROUND, not per ppermute: tripling the
+    # launch overhead must shift the cost by exactly rounds * 2 * ovh
+    hw3 = HardwareSpec(ici_bw=50e9, launch_overhead=15e-6)
+    cm3 = CostModel(8, 2, 64, page_size=8, hw=hw3)
+    assert (cm3.merge_cost(4, 16) - cm.merge_cost(4, 16)
+            == pytest.approx(2 * 2 * 5e-6))
+
+
+def test_replicate_gain_prefers_hot_short_nodes():
+    cm = CostModel(8, 2, 64, page_size=16)
+    # hot short prefix: merge wire dwarfs the duplicated read
+    assert cm.replicate_gain(8, 64, 4) > 0
+    # long document: the parallel read win dominates
+    assert cm.replicate_gain(2, 65536, 4) < 0
+    assert cm.replicate_gain(8, 64, 1) == 0.0
+
+
+# --------------------------------------------------------------------- #
+# fit(): measured-cost calibration from step features
+# --------------------------------------------------------------------- #
+def _samples(hw: HardwareSpec, rng) -> list:
+    rows = []
+    for _ in range(48):
+        hbm = float(rng.uniform(1e6, 5e8))
+        steps = float(rng.integers(4, 400))
+        mb = float(rng.uniform(0, 2e6))
+        mr = float(rng.integers(0, 12))
+        secs = (hbm / hw.hbm_bw + steps * hw.grid_step_overhead
+                + mb / hw.ici_bw + mr * hw.launch_overhead)
+        rows.append(dict(hbm_bytes=hbm, grid_steps=steps, merge_bytes=mb,
+                         merge_rounds=mr, seconds=secs))
+    return rows
+
+
+def test_fit_recovers_planted_coefficients():
+    true = HardwareSpec(hbm_bw=123e9, ici_bw=7e9,
+                        grid_step_overhead=3e-6, launch_overhead=11e-6)
+    cm = CostModel(8, 2, 64, page_size=16)
+    assert not cm.calibrated
+    assert cm.fit(_samples(true, np.random.default_rng(0)))
+    assert cm.calibrated
+    assert cm.hw.hbm_bw == pytest.approx(true.hbm_bw, rel=1e-3)
+    assert cm.hw.ici_bw == pytest.approx(true.ici_bw, rel=1e-3)
+    assert cm.hw.grid_step_overhead == pytest.approx(
+        true.grid_step_overhead, rel=1e-3)
+    assert cm.hw.launch_overhead == pytest.approx(
+        true.launch_overhead, rel=1e-3)
+
+
+def test_fit_keeps_coefficients_without_variation():
+    # every step identical in the merge columns -> ici/launch untouched
+    true = HardwareSpec(hbm_bw=200e9)
+    rng = np.random.default_rng(1)
+    rows = []
+    for _ in range(32):
+        hbm = float(rng.uniform(1e7, 4e8))
+        rows.append(dict(hbm_bytes=hbm, grid_steps=0.0, merge_bytes=0.0,
+                         merge_rounds=0.0, seconds=hbm / true.hbm_bw))
+    cm = CostModel(8, 2, 64, page_size=16)
+    before = cm.hw
+    assert cm.fit(rows)
+    assert cm.hw.hbm_bw == pytest.approx(true.hbm_bw, rel=1e-3)
+    assert cm.hw.ici_bw == before.ici_bw
+    assert cm.hw.launch_overhead == before.launch_overhead
+    assert cm.hw.grid_step_overhead == before.grid_step_overhead
+
+
+def test_fit_requires_enough_samples():
+    cm = CostModel(8, 2, 64, page_size=16)
+    rows = _samples(HardwareSpec(), np.random.default_rng(2))[:5]
+    assert not cm.fit(rows)
+    assert not cm.calibrated
+
+
+# --------------------------------------------------------------------- #
+# sharded scheduler: the merge is charged ONCE, not per piece
+# --------------------------------------------------------------------- #
+def test_sharded_merge_charged_once_and_row_accurate():
+    cm = CostModel(4, 2, 16, page_size=8)
+    # one 8-page node whose pages straddle 2 shards (stride 16)
+    pages = {1: list(range(4)) + list(range(16, 20))}
+    tasks = [TaskSpec(1, 4, 64)]
+    sched = divide_and_schedule_sharded(
+        tasks, cm, 2, 2, 8, node_pages=lambda nid: pages[nid],
+        shard_of_page=lambda g: g // 16, num_queries=4)
+    assert sched.seq_splits == 1
+    # merge term == the model's single charge for the full batch...
+    assert sched.merge_cost == pytest.approx(cm.merge_cost(2, 4))
+    assert sched.makespan == pytest.approx(
+        max(max(s.lane_costs) for s in sched.shards) + sched.merge_cost)
+    # ...and shrinks with the merge-row count when rows skip the wire
+    sparse = divide_and_schedule_sharded(
+        tasks, cm, 2, 2, 8, node_pages=lambda nid: pages[nid],
+        shard_of_page=lambda g: g // 16, num_queries=4,
+        num_merge_queries=1)
+    assert sparse.merge_cost == pytest.approx(cm.merge_cost(2, 1))
+    assert sparse.merge_cost < sched.merge_cost
+    # pieces carry only local compute: the per-shard lane costs must not
+    # exceed the whole node's undivided cost (the old surcharge added
+    # the full merge to every piece, inflating lanes past this bound)
+    whole = cm(4, 64)
+    for s in sched.shards:
+        assert max(s.lane_costs) <= whole + 1e-12
+
+
+def test_sharded_replicated_prefix_identical_across_shards():
+    cm = CostModel(4, 2, 16, page_size=8)
+    pages = {1: list(range(4)), 2: list(range(16, 18))}
+    tasks = [TaskSpec(1, 4, 32), TaskSpec(2, 4, 16)]
+    sched = divide_and_schedule_sharded(
+        tasks, cm, 2, 2, 8, node_pages=lambda nid: pages[nid],
+        shard_of_page=lambda g: g // 16, num_queries=4,
+        replicated={1}, num_merge_queries=0)
+    assert sched.merge_cost == 0.0
+    # node 1's subtasks are prepended IDENTICALLY to every shard
+    reps = [[(s.node_id, s.q_lo, s.q_hi, s.kv_lo, s.kv_hi)
+             for s in sh.subtasks if s.node_id == 1]
+            for sh in sched.shards]
+    assert reps[0] and reps[0] == reps[1]
+    prefix = [[s.node_id for s in sh.subtasks[:len(reps[0])]]
+              for sh in sched.shards]
+    assert all(set(p) == {1} for p in prefix)
+    # node 2 stays local to its shard
+    locs = [[s for s in sh.subtasks if s.node_id == 2]
+            for sh in sched.shards]
+    assert bool(locs[0]) != bool(locs[1])
+
+
+# --------------------------------------------------------------------- #
+# affinity size bound must not evict live nodes (quota reset bug)
+# --------------------------------------------------------------------- #
+def test_affinity_eviction_keeps_live_quota():
+    al = ShardedPageAllocator(2, 64, seq_split_pages=4)
+    live = al.alloc(2, hint=1)              # 2/4 of the quota used
+    s0 = al.shard_of(live[0])
+    # churn far more dead hints than the size bound holds
+    for h in range(10_000):
+        al.release(al.alloc(1, hint=1000 + h))
+    # the LIVE entry survived: growth continues the same run...
+    more = al.alloc(2, hint=1)
+    assert [al.shard_of(g) for g in more] == [s0, s0]
+    # ...and the quota kept counting — the 5th page must move shards
+    # (a reset quota would keep it on s0 and scatter later growth)
+    nxt = al.alloc(1, hint=1)
+    assert al.shard_of(nxt[0]) == 1 - s0
+    al.check()
+
+
+def test_affinity_release_reaps_dead_hints():
+    al = ShardedPageAllocator(2, 8, seq_split_pages=2)
+    rows = al.alloc(2, hint=5)
+    assert al._affinity[5][2] == 2          # live refcount tracks rows
+    al.release(rows)
+    assert al._affinity[5][2] == 0          # dead -> evictable
+    for h in range(9_000):
+        al.release(al.alloc(1, hint=100_000 + h))
+    assert 5 not in al._affinity            # bound reclaimed it
+    assert len(al._affinity) <= 8192
+    al.check()
+
+
+def test_alloc_replicas_all_or_nothing():
+    al = ShardedPageAllocator(2, 8)
+    taken = al.alloc(5)                     # one shard now has < 4 free
+    reps = al.alloc_replicas(3, hint=9)
+    assert set(reps) == {0, 1}
+    assert all(len(v) == 3 for v in reps.values())
+    assert all(al.shard_of(g) == s for s, v in reps.items() for g in v)
+    free_before = al.num_free
+    with pytest.raises(MemoryError):
+        al.alloc_replicas(4, hint=10)       # shard with 5 taken can't fit
+    assert al.num_free == free_before       # nothing leaked on failure
+    for v in reps.values():
+        al.release(v)
+    al.release(taken)
+    assert al.num_free == al.num_pages
+    al.check()

@@ -249,12 +249,12 @@ SHARDED_PARITY = textwrap.dedent("""\
     LATE = DOC + [300, 301]                        # arrives mid-decode
 
     def run(mesh=None, temperature=0.0, num_pages=256, prefill_chunk=None,
-            fused=True, check_leaks=True):
+            fused=True, check_leaks=True, replicate=False):
         eng = DecodeEngine(cfg, params, page_size=8, num_pages=num_pages,
                            backend="codec-xla", max_q=8,
                            temperature=temperature, mesh=mesh, fused=fused,
                            seq_split_pages=2 if mesh is not None else 0,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk, replicate=replicate)
         rids = [eng.add_request(p, max_new=6) for p in PROMPTS]
         eng.step(); eng.step()
         rids.append(eng.add_request(LATE, max_new=4))
@@ -290,12 +290,33 @@ SHARDED_PARITY = textwrap.dedent("""\
         assert gott == reft, f"temp>0 stream diverged on {d}x{m}"
         print(f"mesh {d}x{m}: parity OK")
 
+    # forced replication: the hot shared prefix is promoted to replicas
+    # on every data shard, streams stay byte-identical (replicated rows
+    # are computed identically everywhere and skip the wire), and every
+    # replica page is reclaimed on release
+    for d, m in ((2, 1), (2, 2)):
+        gotr, str_ = run(mesh=decode_mesh(d, m), replicate=True)
+        assert gotr == ref, f"replicated stream diverged on {d}x{m}"
+        assert str_["replica_promotions"] >= 1, str_
+        assert str_["compile_ok"], str_
+        gotrt, _ = run(mesh=decode_mesh(d, m), replicate=True,
+                       temperature=0.7)
+        assert gotrt == reft, f"replicated temp stream diverged on {d}x{m}"
+        print(f"mesh {d}x{m}: replication OK")
+
     # 2x2 under memory pressure: eviction + chunked prefill, same stream
     gotp, stp = run(mesh=decode_mesh(2, 2), num_pages=10, prefill_chunk=8)
     assert gotp == ref, "pressured 2x2 stream diverged"
     assert stp["preempted"] >= 1, stp
     assert stp["prefill_chunks"] >= 1, stp
     assert stp["compile_ok"], stp
+
+    # replication enabled under the same pressure: the free-page guard
+    # and the demotion reclaim tier must keep the stream correct
+    gotrp, strp = run(mesh=decode_mesh(2, 1), num_pages=12,
+                      prefill_chunk=8, replicate=True)
+    assert gotrp == ref, "pressured replicated stream diverged"
+    assert strp["compile_ok"], strp
     print("SHARDED_PARITY_OK")
 """)
 
@@ -356,4 +377,114 @@ def test_sharded_arch_sweep_subprocess(tmp_path):
     r = subprocess.run([sys.executable, str(script)], env=env,
                        capture_output=True, text=True, timeout=1200)
     assert "ARCH_SWEEP_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-4000:]
+
+
+POR_PROPERTY = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import itertools
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.kernels import por
+    from repro.kernels.ref import MASK_VALUE
+
+    rng = np.random.default_rng(0)
+
+    def partials(D, rows, h, d, contrib):
+        # per-shard stacked partials; non-contributing shards hold the
+        # POR identity (o=0, m=MASK_VALUE, l=0) exactly as the sharded
+        # step's tail/plan paths produce it
+        o = rng.standard_normal((D, rows, h, d)).astype(np.float32)
+        m = (3.0 * rng.standard_normal((D, rows, h))).astype(np.float32)
+        l = rng.uniform(0.5, 4.0, (D, rows, h)).astype(np.float32)
+        for s in range(D):
+            if not contrib[s]:
+                o[s], m[s], l[s] = 0.0, MASK_VALUE, 0.0
+        return (jnp.asarray(o), jnp.asarray(m), jnp.asarray(l))
+
+    def build(D):
+        devs = np.asarray(jax.devices()[:D]).reshape(D)
+        mesh = Mesh(devs, ("data",))
+        spec = (P("data"),) * 3
+        def sub(o, m, l, c):
+            ro, rm, rl = por.por_subgroup_merge(o[0], m[0], l[0],
+                                                "data", D, c)
+            return ro[None], rm[None], rl[None]
+        def full(o, m, l):
+            ro, rm, rl = por.por_allmerge(o[0], m[0], l[0], "data", D)
+            return ro[None], rm[None], rl[None]
+        # contrib is a TRACED argument, exactly as the engine passes it:
+        # ONE compiled program serves every ownership mask
+        f_sub = jax.jit(shard_map(sub, mesh=mesh, in_specs=spec + (P(),),
+                                  out_specs=spec, check_rep=False))
+        f_full = jax.jit(shard_map(full, mesh=mesh, in_specs=spec,
+                                   out_specs=spec, check_rep=False))
+        return f_sub, f_full
+
+    for D in (1, 2, 4):
+        masks = [m for m in itertools.product([False, True], repeat=D)
+                 if any(m)]
+        f_sub, f_full = build(D)
+        for trial in range(3):
+            for mask in masks:
+                args = partials(D, rows=5, h=2, d=16, contrib=mask)
+                c = jnp.asarray(np.asarray(mask))
+                got = [np.asarray(a) for a in f_sub(*args, c)]
+                want = [np.asarray(a) for a in f_full(*args)]
+                # the max-space statistic matches the full butterfly
+                # BITWISE for every mask (identity merges are exact and
+                # max admits no fused-multiply reassociation)...
+                np.testing.assert_array_equal(got[1], want[1])
+                # ...o and l match within FMA slot asymmetry + the one
+                # (o*l)/l rounding only the butterfly's identity merges
+                # pay; likewise across devices
+                for g, w in zip(got, want):
+                    np.testing.assert_allclose(g, w, rtol=2e-6, atol=2e-6)
+                    for s in range(1, D):
+                        np.testing.assert_allclose(g[s], g[0], rtol=2e-6,
+                                                   atol=2e-6)
+                ids = [i for i, f in enumerate(mask) if f]
+                if len(ids) == 1:
+                    # single contributor: pure copy cascade — the
+                    # owner's partials reach every shard UNPERTURBED,
+                    # bitwise (the wire-skip float-hygiene guarantee;
+                    # the full butterfly would perturb o)
+                    src = [np.asarray(a)[ids[0]] for a in args]
+                    for g, s_ in zip(got, src):
+                        for s in range(D):
+                            np.testing.assert_array_equal(g[s], s_)
+        # one compile each: the mask never enters the jit signature
+        assert f_sub._cache_size() == 1, D
+        # packed transfer: ONE ppermute per round (the full butterfly
+        # pays three; copy rounds still ship the packed buffer so the
+        # program stays shape-uniform)
+        args = partials(D, rows=5, h=2, d=16, contrib=masks[0])
+        rounds = max(D - 1, 0).bit_length()
+        c = jnp.asarray(np.asarray(masks[0]))
+        txt_sub = str(jax.make_jaxpr(f_sub)(*args, c))
+        txt_full = str(jax.make_jaxpr(f_full)(*args))
+        assert txt_sub.count("ppermute") == rounds, D
+        assert txt_full.count("ppermute") == 3 * rounds, D
+        print(f"D={D}: {len(masks)} masks OK")
+    print("POR_PROPERTY_OK")
+""")
+
+
+def test_por_subgroup_merge_property_subprocess(tmp_path):
+    """Property: for EVERY ownership mask at axis sizes 1/2/4, the
+    sparse subgroup merge matches the full POR butterfly — bitwise in
+    max space, to FMA slot asymmetry in o/l, and bitwise-verbatim for
+    single-contributor rows — with one packed ppermute per round vs the
+    butterfly's three and a single compiled program per axis size."""
+    script = tmp_path / "por_property.py"
+    script.write_text(POR_PROPERTY)
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert "POR_PROPERTY_OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-4000:]
