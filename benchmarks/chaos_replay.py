@@ -1,0 +1,347 @@
+"""Chaos replay: serve_replay traffic under seeded fault schedules.
+
+Replays the serving workload (shared-document prompts, scripted
+arrivals, streaming callbacks) through each engine mode — eager,
+fused, cached, speculative — twice:
+
+* a **baseline** pass with no faults, recording every token stream;
+* a **chaos** pass with a seeded :class:`FaultPlan` (allocator
+  exhaustion, failed dispatches, NaN logits, raising callbacks,
+  stalls) plus one mid-flight ``cancel()`` and one request that runs
+  past its deadline on a fake step-counting clock.
+
+The acceptance bar (ISSUE 8 / DESIGN.md §12):
+
+* **survivor parity** — every request that still finishes ``done``
+  streams a token sequence byte-identical to its baseline run;
+* **blast-radius** — only NaN / callback victims may end ``failed``;
+  alloc / dispatch / stall faults must be absorbed by the degradation
+  ladder without touching any stream;
+* **no leaks** — after ``shutdown()`` the page pool is empty and the
+  invariant self-check passes;
+* **quiescence** — every scheduled fault firing was delivered
+  (``injector.pending() == 0``), so nothing silently missed its seam.
+
+Writes ``BENCH_chaos.json`` and exits non-zero on any violation, so CI
+can run ``--preset smoke`` as a gate.  Wall-clock numbers are
+incidental (see benchmarks/common.py); the pass/fail booleans and
+fault counters are the signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving.cache import CachePolicy
+from repro.serving.engine import DONE, DecodeEngine
+from repro.serving.faults import KINDS, FaultPlan, FaultSpec
+from repro.serving.speculation import SpecConfig
+
+PRESETS = {
+    # CI-sized: six requests over two shared docs, short generations.
+    "smoke": dict(arch="qwen2.5-14b", page_size=16, num_pages=256,
+                  doc_len=48, num_docs=2, requests=6, max_new=6,
+                  rate=1.0, fault_steps=8, fault_rate=0.08),
+    # Deeper soak: more requests, longer tail of fault steps.
+    "full": dict(arch="qwen2.5-14b", page_size=16, num_pages=512,
+                 doc_len=96, num_docs=3, requests=10, max_new=10,
+                 rate=1.0, fault_steps=16, fault_rate=0.15),
+}
+
+MODES = ("eager", "fused", "cached", "spec")
+
+# terminal reasons a fault schedule is ALLOWED to produce; anything
+# else (e.g. kv_exhausted) means a benign fault escaped its seam
+EXPECTED_FAIL = {"nan_logits", "callback_error"}
+EXPECTED_STOP = {"cancelled", "deadline", "queue_timeout"}
+
+
+class StepClock:
+    """Deterministic engine clock: one 'second' per engine step."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def build_mix(args):
+    """serve_replay-style mix: shared in-vocab docs + unique tails."""
+    docs = [np.random.default_rng(1000 + d).integers(
+                0, 251, size=args.doc_len).tolist()
+            for d in range(args.num_docs)]
+    rng = np.random.default_rng(args.seed)
+    prompts = []
+    for i in range(args.requests):
+        tail = [int(t) for t in rng.integers(1, 251, size=4 + (i % 3))]
+        prompts.append(docs[i % args.num_docs] + tail)
+    return prompts
+
+
+def build_plan(args, mode) -> FaultPlan:
+    """Seeded schedule + a deterministic floor so every kind fires.
+
+    ``alloc`` is handled specially: the allocator seam is only visited
+    when pages are actually requested (admission prefills, tail
+    growth), so a late-scheduled alloc spec could sit armed forever —
+    breaking the quiescence check.  The plan pins a single alloc spec
+    at step 0 (guaranteed to meet the first prefill) and keeps the
+    seeded draw to the always-visited seams.  Speculative decode pins
+    its page working set up front, so the seam is gated off there
+    (engine.py ``_alloc_pages``) and alloc is left out entirely.
+    """
+    kinds = tuple(k for k in KINDS if k != "alloc")
+    seeded = FaultPlan.seeded(args.seed, steps=args.fault_steps,
+                              rate=args.fault_rate, kinds=kinds,
+                              stall_s=0.002)
+    floor = [FaultSpec("dispatch", 2, times=2),
+             FaultSpec("nan_logits", 4),
+             FaultSpec("callback", 3),
+             FaultSpec("stall", 5, payload=0.003)]
+    if mode != "spec":
+        floor.append(FaultSpec("alloc", 0))
+    return FaultPlan(list(seeded.specs) + floor)
+
+
+def make_engine(cfg, params, args, mode, faults=None, clock=None):
+    kw = dict(page_size=args.page_size, num_pages=args.num_pages,
+              backend="codec-xla", max_q=max(8, args.requests),
+              temperature=0.0, faults=faults, nan_guard=True,
+              check_every=4, clock=clock)
+    if mode == "fused":
+        kw["fused"] = True
+    elif mode == "cached":
+        kw["cache"] = CachePolicy()
+    elif mode == "spec":
+        kw["speculative"] = SpecConfig(depth=2, branch=2, max_nodes=3)
+    return DecodeEngine(cfg, params, **kw)
+
+
+def drive(eng, prompts, args, clock, cancels=(), deadline_rid=None,
+          max_steps=400):
+    """Open-loop scripted replay; returns (streams, reasons).
+
+    ``streams`` is what each request's ``on_token`` callback actually
+    saw; ``reasons`` maps rid -> finish_reason from ``on_done``.
+    """
+    streams: dict = {}
+    reasons: dict = {}
+
+    def on_token(rid, tok):
+        streams.setdefault(rid, []).append(tok)
+
+    def on_done(rid, reason):
+        reasons[rid] = reason
+
+    arrivals = [(int(i / args.rate), p) for i, p in enumerate(prompts)]
+    cancel_at = dict(cancels)                      # step -> rid
+    rids, i, step = [], 0, 0
+    while i < len(arrivals) or eng.has_work():
+        while i < len(arrivals) and arrivals[i][0] <= step:
+            # half a "second" past submission: at most one decode step
+            # lands before the deadline sweep retires it, in every mode
+            # (spec commits < max_new tokens per dispatch)
+            dl = 0.5 if len(rids) == deadline_rid else None
+            rids.append(eng.add_request(
+                arrivals[i][1], max_new=args.max_new,
+                on_token=on_token, on_done=on_done, deadline_s=dl))
+            i += 1
+        if step in cancel_at:
+            eng.cancel(rids[cancel_at[step]])
+        eng.step()
+        clock.t += 1.0
+        step += 1
+        if step > max_steps:
+            raise RuntimeError(f"chaos replay did not drain "
+                               f"within {max_steps} steps")
+    eng.flush_tokens()
+    eng._stream_ready()
+    eng._notify_done()
+    return streams, reasons
+
+
+def run_mode(cfg, params, args, mode):
+    prompts = build_mix(args)
+    rec = {"mode": mode, "violations": []}
+
+    def fail(msg):
+        rec["violations"].append(msg)
+        print(f"  FAIL [{mode}] {msg}", file=sys.stderr)
+
+    # ---- baseline pass: no faults, full streams ---------------------- #
+    clk = StepClock()
+    eng = make_engine(cfg, params, args, mode, clock=clk)
+    t0 = time.perf_counter()
+    base_streams, base_reasons = drive(eng, prompts, args, clk)
+    rec["baseline_wall_s"] = time.perf_counter() - t0
+    if any(v != "done" for v in base_reasons.values()):
+        fail(f"baseline pass not clean: {base_reasons}")
+    base_left = eng.shutdown()["used_pages"]
+    if base_left:
+        fail(f"baseline leaked {base_left} pages")
+
+    # ---- chaos pass: seeded faults + cancel + deadline --------------- #
+    plan = build_plan(args, mode)
+    clock = StepClock()
+    eng = make_engine(cfg, params, args, mode, faults=plan, clock=clock)
+    # cancel the second-to-last request just after its arrival (spec
+    # mode commits several tokens per step, so a later cancel could
+    # race completion); the last request gets a deadline it cannot meet
+    cancel_rid = args.requests - 2
+    cancel_step = int(cancel_rid / args.rate) + (0 if mode == "spec"
+                                                 else 2)
+    t0 = time.perf_counter()
+    streams, reasons = drive(eng, prompts, args, clock,
+                             cancels=[(cancel_step, cancel_rid)],
+                             deadline_rid=args.requests - 1)
+    rec["chaos_wall_s"] = time.perf_counter() - t0
+    st = eng.stats
+    rec["faults_fired"] = dict(eng.injector.fired)
+    rec["faults_pending"] = eng.injector.pending()
+    rec["outcomes"] = {r: reasons.get(r, eng.requests[r].finish_reason)
+                       for r in sorted(eng.requests)}
+    rec["stats"] = {k: st[k] for k in (
+        "faults_injected", "dispatch_failures", "dispatch_recoveries",
+        "nan_rows", "callback_errors", "cancelled", "timed_out",
+        "failed", "invariant_checks", "preempted")}
+
+    # survivor parity: done requests stream byte-identical to baseline
+    survivors = [r for r, q in eng.requests.items() if q.state == DONE]
+    rec["survivors"] = len(survivors)
+    for r in survivors:
+        if streams.get(r) != base_streams.get(r):
+            fail(f"survivor {r} diverged: {streams.get(r)} != "
+                 f"{base_streams.get(r)}")
+        if streams.get(r) != eng.requests[r].generated:
+            fail(f"survivor {r} stream != generated")
+    rec["survivor_parity"] = not any(
+        "diverged" in v or "generated" in v for v in rec["violations"])
+
+    # blast radius: non-survivors must be fault victims, never
+    # collateral of alloc/dispatch/stall (those are absorbed)
+    for r, q in eng.requests.items():
+        if q.state == DONE:
+            continue
+        reason = q.finish_reason
+        if q.state == "failed" and reason not in EXPECTED_FAIL:
+            fail(f"request {r} failed for unexpected reason {reason!r}")
+        if q.state in ("cancelled", "timed_out") \
+                and reason not in EXPECTED_STOP:
+            fail(f"request {r} stopped for unexpected reason {reason!r}")
+    # the scheduled cancel / deadline victims must leave through their
+    # lane — unless a fault legitimately claimed them first
+    all_rids = sorted(eng.requests)
+    for rid, want in ((all_rids[cancel_rid], "cancelled"),
+                      (all_rids[-1], "timed_out")):
+        q = eng.requests[rid]
+        if q.state != want and not (q.state == "failed"
+                                    and q.finish_reason in EXPECTED_FAIL):
+            fail(f"{want} victim {rid} ended {q.state}"
+                 f"/{q.finish_reason} instead")
+
+    # degradation ladder: every injected dispatch failure recovered
+    if eng.injector.fired["dispatch"] != st["dispatch_recoveries"]:
+        fail(f"dispatch faults {eng.injector.fired['dispatch']} != "
+             f"recoveries {st['dispatch_recoveries']}")
+
+    # quiescence: the whole schedule was delivered
+    if rec["faults_pending"]:
+        fail(f"{rec['faults_pending']} fault firings never delivered")
+
+    # self-check + leak check on the wreckage
+    try:
+        eng.check()
+    except Exception as e:                    # EngineInvariantError
+        fail(f"post-chaos invariant check: {e}")
+    leaked = eng.shutdown()["used_pages"]
+    rec["leaked_pages"] = leaked
+    if leaked:
+        fail(f"chaos pass leaked {leaked} pages")
+
+    rec["ok"] = not rec["violations"]
+    print(f"[{mode}] {'ok' if rec['ok'] else 'FAIL'}: "
+          f"{st['faults_injected']} faults "
+          f"({rec['faults_fired']}), survivors "
+          f"{rec['survivors']}/{args.requests}, outcomes "
+          f"{rec['outcomes']}, leaked {leaked} pages")
+    return rec
+
+
+def run_benign(cfg, params, args):
+    """Disruption-free kinds only: alloc/dispatch/stall must leave
+    every stream untouched — all requests finish ``done`` and match
+    the fault-free baseline byte-for-byte."""
+    prompts = build_mix(args)
+    rec = {"mode": "eager-benign", "violations": []}
+    clk = StepClock()
+    eng = make_engine(cfg, params, args, "eager", clock=clk)
+    base_streams, _ = drive(eng, prompts, args, clk)
+    eng.shutdown()
+
+    plan = FaultPlan([FaultSpec("alloc", 0), FaultSpec("alloc", 2),
+                      FaultSpec("dispatch", 1, times=2),
+                      FaultSpec("dispatch", 4),
+                      FaultSpec("stall", 3, payload=0.002)])
+    clk = StepClock()
+    eng = make_engine(cfg, params, args, "eager", faults=plan,
+                      clock=clk)
+    streams, reasons = drive(eng, prompts, args, clk)
+    if streams != base_streams:
+        rec["violations"].append("benign faults perturbed a stream")
+    if any(v != "done" for v in reasons.values()):
+        rec["violations"].append(f"benign faults ended a request "
+                                 f"early: {reasons}")
+    rec["faults_fired"] = dict(eng.injector.fired)
+    rec["faults_pending"] = eng.injector.pending()
+    if rec["faults_pending"]:
+        rec["violations"].append("benign schedule not fully delivered")
+    rec["leaked_pages"] = eng.shutdown()["used_pages"]
+    if rec["leaked_pages"]:
+        rec["violations"].append(f"leaked {rec['leaked_pages']} pages")
+    rec["ok"] = not rec["violations"]
+    print(f"[eager-benign] {'ok' if rec['ok'] else 'FAIL'}: "
+          f"{rec['faults_fired']} absorbed, streams identical: "
+          f"{streams == base_streams}")
+    for v in rec["violations"]:
+        print(f"  FAIL [eager-benign] {v}", file=sys.stderr)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
+    ap.add_argument("--modes", default=",".join(MODES),
+                    help="comma-separated subset of " + ",".join(MODES))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+    for k, v in PRESETS[args.preset].items():
+        setattr(args, k, v)
+
+    cfg = smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    records = [run_benign(cfg, params, args)]
+    for mode in args.modes.split(","):
+        records.append(run_mode(cfg, params, args, mode))
+
+    ok = all(r["ok"] for r in records)
+    result = {"preset": args.preset, "seed": args.seed, "ok": ok,
+              "modes": records}
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {args.out}: "
+          f"{'all modes ok' if ok else 'VIOLATIONS (see stderr)'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,14 +44,19 @@ PRESETS = {
 
 
 def build_mix(args, rng, pass_no):
-    """Prompts over shared system prompts + per-request unique tails."""
-    docs = [list(range(1000 * (d + 1), 1000 * (d + 1) + args.doc_len))
+    """Prompts over shared system prompts + per-request unique tails.
+
+    Token ids must fit the smoke vocab (the engine validates prompts),
+    so each doc draws from its own seeded stream — docs stay distinct
+    from each other and stable across passes/pass_no."""
+    docs = [np.random.default_rng(1000 + d).integers(
+                0, 251, size=args.doc_len).tolist()
             for d in range(args.num_docs)]
     prompts = []
     for i in range(args.requests):
         doc = docs[i % args.num_docs]
         tail = [int(t) for t in
-                rng.integers(1, 900, size=4 + (i % 3))]
+                rng.integers(1, 251, size=4 + (i % 3))]
         prompts.append(doc + tail)
     return prompts
 

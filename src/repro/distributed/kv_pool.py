@@ -231,6 +231,15 @@ class ShardedPageAllocator:
             if st is not None:
                 st[2] = max(0, st[2] - 1)
 
+    def used_page_ids(self) -> Dict[int, int]:
+        """Allocated GLOBAL rows -> refcount across every shard (the
+        engine's self-check compares this with forest page ownership)."""
+        out: Dict[int, int] = {}
+        for sh, s in enumerate(self.shards):
+            for local, refs in s.used_page_ids().items():
+                out[sh * self.stride + local] = refs
+        return out
+
     def check(self) -> None:
         """Per-shard structural invariants (tests call after workloads)."""
         for s in self.shards:

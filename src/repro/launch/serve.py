@@ -106,6 +106,24 @@ def main() -> int:
                          "report first-token latencies")
     ap.add_argument("--max-steps", type=int, default=0,
                     help="engine step budget (0 = max-new + slack)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds; "
+                         "requests past it finish TIMED_OUT with their "
+                         "KV released (docs/FAULTS.md)")
+    ap.add_argument("--max-queue", type=float, default=None,
+                    help="max seconds a request may sit WAITING before "
+                         "it times out unadmitted")
+    ap.add_argument("--check-every", type=int, default=0,
+                    help="run the engine invariant self-check every N "
+                         "steps (0 = only after recoveries)")
+    ap.add_argument("--inject", default=None,
+                    help="fault schedule, e.g. 'dispatch@3*2,"
+                         "nan_logits@5:0,stall@8=0.01' or "
+                         "'seed:7[:rate]' (serving/faults.py grammar)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="per-row NaN/inf logit guard: poisoned rows "
+                         "are quarantined as FAILED instead of "
+                         "streaming garbage (single-device only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.cache_ttl is not None or args.cache_pages is not None:
@@ -153,6 +171,11 @@ def main() -> int:
         cache_policy = CachePolicy(ttl_steps=args.cache_ttl,
                                    max_pages=args.cache_pages)
 
+    fault_plan = None
+    if args.inject:
+        from repro.serving.faults import FaultPlan
+        fault_plan = FaultPlan.parse(args.inject)
+
     def run(backend: str):
         eng = DecodeEngine(cfg, params, page_size=args.page_size,
                            num_pages=args.max_pages, backend=backend,
@@ -164,7 +187,9 @@ def main() -> int:
                            seq_split_pages=args.seq_split_pages,
                            replicate=args.replicate,
                            calibrate=args.calibrate,
-                           speculative=spec, cache=cache_policy)
+                           speculative=spec, cache=cache_policy,
+                           faults=fault_plan, nan_guard=args.nan_guard,
+                           check_every=args.check_every)
         first_tok = {}
 
         def on_token(rid, tok):
@@ -173,10 +198,28 @@ def main() -> int:
         t0 = time.time()
         for p in prompts:
             eng.add_request(p, max_new=args.max_new,
-                            on_token=on_token if args.stream else None)
+                            on_token=on_token if args.stream else None,
+                            deadline_s=args.deadline,
+                            max_queue_s=args.max_queue)
         t_prefill = time.time() - t0
         t0 = time.time()
-        outs = eng.run(max_steps)
+        try:
+            outs = eng.run(max_steps)
+        except KeyboardInterrupt:
+            # graceful shutdown: cancel everything in flight, release
+            # all KV, verify nothing leaked, report what was running
+            print("\ninterrupted — draining engine")
+            summary = eng.shutdown()
+            st = eng.stats
+            n_done = sum(1 for q in eng.requests.values()
+                         if q.state == "done")
+            print(f"    shutdown: {summary['requests']} requests "
+                  f"({n_done} done, {st['cancelled']} cancelled, "
+                  f"{st['timed_out']} timed out, {st['failed']} failed), "
+                  f"{summary['used_pages']} pages leaked, "
+                  f"{st['faults_injected']} faults injected, "
+                  f"{st['callback_errors']} callback errors")
+            raise SystemExit(130)
         t_decode = time.time() - t0
         steps = eng.stats["steps"]
         io = eng.forest.codec_io_bytes(cfg.num_kv_heads, cfg.head_dim)
@@ -238,6 +281,19 @@ def main() -> int:
               f"{st['preempted']} preemptions, {st['reclaimed']} reclaims, "
               f"{st['recompute_tokens']} recomputed tokens, "
               f"{st['prefill_chunks']} prefill chunks{shard_occ}")
+        if eng.injector is not None or args.nan_guard or args.deadline:
+            ended = {s: sum(1 for q in eng.requests.values()
+                            if q.state == s)
+                     for s in ("done", "cancelled", "timed_out", "failed")}
+            fired = (dict(eng.injector.fired)
+                     if eng.injector is not None else {})
+            print(f"    faults: {st['faults_injected']} injected "
+                  f"{fired}, {st['dispatch_failures']} dispatch "
+                  f"failures / {st['dispatch_recoveries']} recovered, "
+                  f"{st['nan_rows']} NaN rows quarantined, "
+                  f"{st['callback_errors']} callback errors, "
+                  f"{st['invariant_checks']} self-checks | outcomes "
+                  f"{ended}")
         if args.stream and first_tok:
             ttfts = sorted(1000 * (first_tok[r] - t0) for r in first_tok)
             print(f"    streaming: first token after "
@@ -265,7 +321,7 @@ def main() -> int:
                   f"{cs['evicted_nodes']} nodes / {cs['evicted_pages']} "
                   f"pages evicted")
         unfinished = [r for r, q in eng.requests.items()
-                      if len(q.generated) < q.max_new]
+                      if len(q.generated) < q.max_new and not q.finished]
         if unfinished:
             print(f"    WARNING: {len(unfinished)} requests unfinished "
                   f"within {max_steps} steps: {unfinished}")

@@ -84,12 +84,18 @@ from ..kernels import ops, ref as ref_mod, registry as registry_mod
 from ..models import layers as L
 from ..models import mamba as M
 from ..models import transformer as T
+from . import faults as faults_mod
 from . import sampler, speculation as spec_mod, step_fn as step_fn_mod
 from .cache import CachePolicy, PrefixCache
+from .faults import EngineInvariantError, InjectedFault, ResourceExhausted
 from .kv_cache import PagedKVPool
 
 # request lifecycle states
 WAITING, PREFILL, RUNNING, DONE = "waiting", "prefill", "running", "done"
+# terminal failure states (DESIGN.md §12): the request is over, its KV
+# released, and its stream closed via on_done(rid, reason)
+CANCELLED, TIMED_OUT, FAILED = "cancelled", "timed_out", "failed"
+TERMINAL = frozenset({DONE, CANCELLED, TIMED_OUT, FAILED})
 
 # a sampled token that still lives in an un-synced device array
 # (fused async dispatch); materialised by ``DecodeEngine.flush_tokens``
@@ -105,10 +111,11 @@ class _Deferred:
     flush can write the real values in place.
     """
 
-    __slots__ = ("tokens", "rows", "patches")
+    __slots__ = ("tokens", "ok", "rows", "patches")
 
-    def __init__(self, tokens, rows):
+    def __init__(self, tokens, rows, ok=None):
         self.tokens = tokens          # (B_bucket,) device int32
+        self.ok = ok                  # (B_bucket,) device bool, or None
         self.rows = rows              # request id per row
         self.patches = []             # (rid, row, gen_idx, node_id, tok_idx)
 
@@ -127,10 +134,20 @@ class Request:
     kv_freed: bool = False             # done + KV reclaimed under pressure
     on_token: Optional[Any] = None     # streaming callback (rid, token)
     emitted: int = 0                   # tokens already streamed out
+    on_done: Optional[Any] = None      # stream-close callback (rid, reason)
+    submit_t: float = 0.0              # engine-clock time at add_request
+    deadline: Optional[float] = None   # absolute end-to-end deadline
+    queue_deadline: Optional[float] = None  # absolute admission deadline
+    finish_reason: Optional[str] = None
+    notified: bool = False             # on_done already fired
 
     @property
     def done(self) -> bool:
         return self.state == DONE
+
+    @property
+    def finished(self) -> bool:
+        return self.state in TERMINAL
 
     @property
     def seq(self) -> List[int]:
@@ -163,7 +180,10 @@ class DecodeEngine:
                  fused: bool = False,
                  mesh=None, seq_split_pages: int = 0,
                  replicate: bool = False, calibrate: bool = False,
-                 speculative=None, cache=None):
+                 speculative=None, cache=None,
+                 faults=None, nan_guard: bool = False,
+                 check_every: int = 0, clock=None,
+                 max_dispatch_retries: int = 4):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -200,6 +220,30 @@ class DecodeEngine:
         self.max_kv_per_task = max_kv_per_task
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+
+        # ---- fault tolerance (serving/faults.py, DESIGN.md §12) ------- #
+        # clock: injectable monotonic time source — deadlines are
+        # enforced against it at step boundaries, so tests and the chaos
+        # harness drive it deterministically (e.g. one unit per step)
+        self.clock = clock if clock is not None else time.monotonic
+        self.nan_guard = bool(nan_guard)
+        if self.nan_guard and mesh is not None:
+            raise ValueError(
+                "nan_guard is not supported with mesh serving: the "
+                "sharded step fn does not emit per-row finite flags")
+        self.check_every = int(check_every)
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        if faults is not None and not isinstance(faults,
+                                                 faults_mod.FaultInjector):
+            faults = faults_mod.FaultInjector(faults)
+        self.injector: Optional[faults_mod.FaultInjector] = faults
+        # admission-shrink rung of the degradation ladder: extra pages
+        # the watermark holds back after repeated dispatch OOM
+        self._backoff_pages = 0
+        # (page, slot) pairs the nan_logits injector poisoned: scrubbed
+        # when the target request is quarantined so a future tenant of
+        # those pages can never read the NaNs
+        self._nan_dirty: List[Tuple[int, int]] = []
 
         # ---- speculative tree-decoding mode (DESIGN.md §10) ----------- #
         # speculative=True (defaults) or a SpecConfig turns each decode
@@ -305,7 +349,11 @@ class DecodeEngine:
                       "token_flushes": 0, "spec_steps": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
                       "spec_draft_stalls": 0, "calibrations": 0,
-                      "replica_promotions": 0, "replica_demotions": 0}
+                      "replica_promotions": 0, "replica_demotions": 0,
+                      "cancelled": 0, "timed_out": 0, "failed": 0,
+                      "callback_errors": 0, "faults_injected": 0,
+                      "dispatch_failures": 0, "dispatch_recoveries": 0,
+                      "nan_rows": 0, "invariant_checks": 0}
         self.step_stats: List[Dict] = []
         self._decode_timing: Dict[str, float] = {}
 
@@ -358,14 +406,46 @@ class DecodeEngine:
     # request admission (admit phase) + chunked prefill (prefill phase)
     # ------------------------------------------------------------------ #
     def add_request(self, prompt: List[int], max_new: int = 16,
-                    on_token=None) -> int:
+                    on_token=None, on_done=None,
+                    deadline_s: Optional[float] = None,
+                    max_queue_s: Optional[float] = None) -> int:
         """Enqueue a request; admits (and prefills) eagerly when memory
         allows, so under no pressure this behaves like immediate prefill.
 
         ``on_token(rid, token)`` streams each generated token as soon as
         its host value exists (immediately on the eager path; at sync
-        boundaries on the fused async path).
+        boundaries on the fused async path).  ``on_done(rid, reason)``
+        closes the stream exactly once with a terminal reason (``done``,
+        ``cancelled``, ``deadline``, ``queue_timeout``, or a failure
+        reason such as ``nan_logits`` / ``callback_error``).
+
+        ``deadline_s`` bounds the request END TO END (queueing included)
+        and ``max_queue_s`` bounds time spent WAITING; both are relative
+        to now on the engine clock and enforced at step boundaries — an
+        expired request transitions to ``TIMED_OUT`` with its KV
+        released.  A deadline also promotes the request in the waiting
+        queue (EDF ordering, ``core.scheduler.AdmissionController``).
         """
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("prompt must contain at least one token")
+        if max_new <= 0:
+            raise ValueError(f"max_new must be positive, got {max_new}")
+        arr = np.asarray(prompt)
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"prompt must be integer token ids, got dtype {arr.dtype}")
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"prompt token id {lo if lo < 0 else hi} outside the "
+                f"vocabulary [0, {self.cfg.vocab_size})")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {deadline_s}")
+        if max_queue_s is not None and max_queue_s <= 0:
+            raise ValueError(
+                f"max_queue_s must be positive, got {max_queue_s}")
         # only an *unservable* prompt is an error: whole-prompt prefill
         # needs every page at once, chunked prefill only one chunk + the
         # tail it grows into (larger prompts just wait in the queue)
@@ -377,10 +457,17 @@ class DecodeEngine:
                 f"admitted")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, list(prompt), max_new=max_new,
-                      on_token=on_token)
+        now = self.clock()
+        req = Request(rid, prompt, max_new=max_new,
+                      on_token=on_token, on_done=on_done, submit_t=now)
+        if deadline_s is not None:
+            req.deadline = now + float(deadline_s)
+        if max_queue_s is not None:
+            req.queue_deadline = now + float(max_queue_s)
         self.requests[rid] = req
-        self.admission.push(rid)
+        edf = [d for d in (req.deadline, req.queue_deadline)
+               if d is not None]
+        self.admission.push(rid, deadline=min(edf) if edf else None)
         self._admit_phase()
         return rid
 
@@ -404,8 +491,11 @@ class DecodeEngine:
         # the draft reserve scales with *currently running* requests so an
         # idle engine always admits its head-of-line request (a reserve
         # counting the candidate itself could starve admission forever on
-        # a pool barely larger than one working set)
-        reserve = self.policy.admission_reserve(len(self._active_rows()))
+        # a pool barely larger than one working set).  _backoff_pages is
+        # the degradation ladder's admission-shrink rung: after repeated
+        # dispatch OOM the watermark rises so retries run with headroom.
+        reserve = (self.policy.admission_reserve(len(self._active_rows()))
+                   + self._backoff_pages)
         return self.pool.num_free - reserve >= need
 
     def _admit_phase(self) -> None:
@@ -498,9 +588,31 @@ class DecodeEngine:
             return
         t0 = time.perf_counter()
         vals = {id(e): np.asarray(e.tokens) for e in self._deferred}
+        # NaN guard: a dispatch whose row_ok flag is False produced
+        # non-finite logits for that row — every token of that request
+        # from the first poisoned index on is garbage.  Quarantine the
+        # request (FAILED) without touching the other rows.
+        poisoned: Dict[int, int] = {}     # rid -> earliest bad gen index
+        if self.nan_guard:
+            for e in self._deferred:
+                if e.ok is None:
+                    continue
+                okv = np.asarray(e.ok)
+                for rid, row, gen_idx, _nid, _tid in e.patches:
+                    if not bool(okv[row]) and gen_idx < poisoned.get(
+                            rid, gen_idx + 1):
+                        poisoned[rid] = gen_idx
+            for rid, (e, row) in self._pending_ref.items():
+                if (e.ok is not None and not bool(np.asarray(e.ok)[row])
+                        and rid not in poisoned):
+                    req = self.requests.get(rid)
+                    if req is not None:   # sampled, never appended
+                        poisoned[rid] = len(req.generated)
         for e in self._deferred:
             v = vals[id(e)]
             for rid, row, gen_idx, node_id, tok_idx in e.patches:
+                if gen_idx >= poisoned.get(rid, gen_idx + 1):
+                    continue              # untrusted suffix: never lands
                 tok = int(v[row])
                 req = self.requests.get(rid)
                 if req is not None and gen_idx < len(req.generated):
@@ -512,13 +624,21 @@ class DecodeEngine:
         # sampled-but-not-yet-appended tokens become host ``pending``s
         for rid, (e, row) in self._pending_ref.items():
             req = self.requests.get(rid)
-            if req is not None and req.pending is PENDING_DEVICE:
+            if (req is not None and req.pending is PENDING_DEVICE
+                    and rid not in poisoned):
                 req.pending = int(vals[id(e)][row])
         self._deferred = []
         self._pending_ref = {}
         self._flushed_since_dispatch = True
         self.stats["token_flushes"] += 1
         self.stats["decode_sync_time"] += time.perf_counter() - t0
+        for rid, cut in poisoned.items():
+            req = self.requests.get(rid)
+            if req is None:
+                continue
+            del req.generated[cut:]       # placeholders only (never -1
+            self.stats["nan_rows"] += 1   # streamed, so emitted <= cut)
+            self._fail_request(rid, "nan_logits", flush=False)
 
     # ------------------------------------------------------------------ #
     # eviction (evict phase) / reclamation
@@ -546,14 +666,22 @@ class DecodeEngine:
         del self.forest.nodes[node.id]
         self._maybe_free_node(parent)
 
-    def _release_kv(self, rid: int) -> None:
-        """Drop a request's forest footprint (finished or released)."""
+    def _release_kv(self, rid: int, force_leaf: bool = False) -> None:
+        """Drop a request's forest footprint (finished or released).
+
+        ``force_leaf=True`` (FAILED requests) bypasses cache retention
+        for the request's PRIVATE leaf: its tail KV may be poisoned
+        (NaN quarantine) or half-written, so it must never be served to
+        a future prefix match.  Shared ancestors hold prompt KV written
+        by prefill and stay retainable."""
         self._rollback_drafts(rid)
+        leaf_id = self.forest.leaf_of.get(rid)
         for node in reversed(self.forest.path(rid)):
             if node.id not in self.forest.nodes:
                 continue
             node.requests.remove(rid)
-            self._maybe_free_node(node)
+            self._maybe_free_node(node,
+                                  force=force_leaf and node.id == leaf_id)
         del self.forest.leaf_of[rid]
         for st in self.mamba_state.values():
             st.pop(rid, None)
@@ -783,15 +911,32 @@ class DecodeEngine:
     def _stream_ready(self) -> None:
         """Deliver newly-materialised tokens to streaming callbacks
         (stops at the first still-deferred placeholder, so fused-mode
-        streams arrive at sync boundaries, in order)."""
-        for req in self.requests.values():
+        streams arrive at sync boundaries, in order).
+
+        User callbacks are ISOLATED: one raising ``on_token`` marks only
+        that request FAILED (reason ``callback_error``) — the engine
+        step, the batch, and every other stream are unaffected."""
+        for req in list(self.requests.values()):
             if req.on_token is None:
                 continue
             gen = req.generated
             while req.emitted < len(gen) and gen[req.emitted] >= 0:
                 tok = gen[req.emitted]
                 req.emitted += 1
-                req.on_token(req.rid, tok)
+                try:
+                    if self.injector is not None:
+                        spec = self.injector.take("callback", rid=req.rid)
+                        if spec is not None:
+                            self.stats["faults_injected"] += 1
+                            raise InjectedFault(
+                                spec, f"injected on_token failure for "
+                                      f"request {req.rid}")
+                    req.on_token(req.rid, tok)
+                except Exception:
+                    self.stats["callback_errors"] += 1
+                    self._fail_request(req.rid, "callback_error",
+                                       flush=False)
+                    break
 
     def _alloc_pages(self, n: int, exclude: Set[int],
                      allow_preempt: bool = True,
@@ -799,6 +944,14 @@ class DecodeEngine:
         """Allocate ``n`` pages, evicting under pressure; ``None`` when
         nothing more can be reclaimed (caller stalls or raises).
         ``hint`` (node id) is the sharded pool's placement affinity."""
+        if (self.injector is not None and self.spec is None
+                and self.injector.take("alloc") is not None):
+            # simulated transient exhaustion: callers degrade exactly as
+            # under real pressure (stall / preempt-and-recompute), so no
+            # committed stream changes.  Gated off in speculative mode:
+            # a mid-commit allocation failure there has no clean unwind.
+            self.stats["faults_injected"] += 1
+            return None
         while self.pool.num_free < n:
             if not self._reclaim_one(exclude, allow_preempt):
                 return None
@@ -1274,15 +1427,25 @@ class DecodeEngine:
         snap = {k: self.stats[k]
                 for k in ("admitted", "preempted", "reclaimed",
                           "prefill_tokens", "recompute_tokens",
-                          "spec_proposed", "spec_accepted")}
+                          "spec_proposed", "spec_accepted",
+                          "cancelled", "timed_out", "failed",
+                          "callback_errors", "faults_injected",
+                          "dispatch_failures", "dispatch_recoveries")}
+        if self.injector is not None:
+            self.injector.tick(len(self.step_stats))
+        self._enforce_deadlines()
         self._admit_phase()
         self._decode_timing = {}
-        out = self._decode_phase()
+        out = self._decode_with_recovery()
         if self.cache is not None:
             self.cache.tick()
             self._detach_finished()
             self._cache_sweep()
         self._stream_ready()
+        self._notify_done()
+        if self.check_every and (len(self.step_stats) + 1) \
+                % self.check_every == 0:
+            self.check()
         cache_stats = {}
         if self.cache is not None:
             resident = self.cache.resident_pages()
@@ -1317,11 +1480,71 @@ class DecodeEngine:
             "running": len(self._active_rows()),
             "pages_free": self.pool.num_free,
             "occupancy": self.pool.occupancy(),
+            **{k: self.stats[k] - snap[k]
+               for k in ("cancelled", "timed_out", "failed",
+                         "callback_errors", "faults_injected",
+                         "dispatch_failures", "dispatch_recoveries")},
             **cache_stats,
         })
         return out
 
+    def _decode_with_recovery(self) -> Dict[int, Optional[int]]:
+        """Dispatch the decode phase under the degradation ladder.
+
+        A recoverable dispatch failure (``ResourceExhausted`` — the
+        analogue of XLA's RESOURCE_EXHAUSTED, raised by a backend or the
+        fault injector) walks one ladder rung per retry: demote replicas
+        -> evict cached nodes -> generic reclaim/preempt -> shrink
+        admission.  Each recovery is followed by a full invariant
+        self-check; ``max_dispatch_retries`` bounds the walk, after
+        which the error propagates (genuinely fatal)."""
+        for attempt in range(self.max_dispatch_retries + 1):
+            try:
+                return self._decode_phase()
+            except ResourceExhausted:
+                self.stats["dispatch_failures"] += 1
+                if (attempt >= self.max_dispatch_retries
+                        or not self._recover_dispatch()):
+                    raise
+                self.stats["dispatch_recoveries"] += 1
+                self._plan_dirty = True
+                self.check()
+        return {}
+
+    def _recover_dispatch(self) -> bool:
+        """One rung of the degradation ladder; ``True`` if anything gave."""
+        repl = [n for n in self.forest.nodes.values()
+                if "replicas" in n.meta]
+        if repl:
+            self._demote_replicas(max(repl,
+                                      key=lambda n: len(n.page_ids)))
+            return True
+        if self.cache is not None and self._evict_cached(1) > 0:
+            return True
+        if self._reclaim_one(set(), allow_preempt=True):
+            return True
+        if self._backoff_pages < self.pool.num_pages:
+            self._backoff_pages += max(1, self.pool.num_pages // 16)
+            return True
+        return False
+
     def _decode_phase(self) -> Dict[int, Optional[int]]:
+        if self.injector is not None:
+            spec = self.injector.take("stall")
+            if spec is not None:
+                # latency fault (a slow mesh shard / host hiccup): the
+                # engine just rides it out — streams are unaffected
+                self.stats["faults_injected"] += 1
+                time.sleep(float(spec.payload) or 0.002)
+            spec = self.injector.take("dispatch")
+            if spec is not None:
+                # raised BEFORE any state mutation, like a backend OOM
+                # surfacing at dispatch: the retry re-enters cleanly
+                self.stats["faults_injected"] += 1
+                raise ResourceExhausted(
+                    f"injected dispatch failure at step "
+                    f"{len(self.step_stats)}: RESOURCE_EXHAUSTED "
+                    f"(simulated)")
         if self.spec is not None:
             return self._decode_phase_spec()
         if self.fused:
@@ -1351,6 +1574,8 @@ class DecodeEngine:
             req = self.requests[r]
             if req.state != RUNNING:   # evicted growing an earlier row
                 continue
+            if req.pending is None:    # dispatch-retry re-entry: this
+                continue               # row already appended this step
             if req.pending is PENDING_DEVICE:
                 ent, row = self._pending_ref.pop(r)
                 self.forest.append_token(r, _PLACEHOLDER)
@@ -1362,7 +1587,20 @@ class DecodeEngine:
                 self.forest.append_token(r, req.pending)
                 req.generated.append(req.pending)
             req.pending = None
-            self._grow_leaf_tail(r)
+            try:
+                self._grow_leaf_tail(r)
+            except MemoryError:
+                # nothing reclaimable right now.  With other tenants the
+                # pressure is transient: preempt-and-recompute keeps the
+                # greedy stream byte-identical.  A lone request can never
+                # get more room — fail it instead of livelocking.
+                others = [q for q in self.requests.values()
+                          if q.rid != r
+                          and q.state in (WAITING, PREFILL, RUNNING)]
+                if others:
+                    self._preempt(r)
+                else:
+                    self._fail_request(r, "kv_exhausted", flush=False)
 
     def _decode_phase_eager(self) -> Dict[int, int]:
         cfg = self.cfg
@@ -1437,20 +1675,39 @@ class DecodeEngine:
             x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
 
         logits = T._unembed(self.params, cfg, x)[:, 0]      # (B, V)
+        if self.injector is not None:
+            spec = self.injector.take("nan_logits")
+            if spec is not None:
+                target = spec.rid if spec.rid in rows else rows[0]
+                logits = logits.at[rows.index(target)].set(jnp.nan)
+                self.stats["faults_injected"] += 1
         self.key, sk = jax.random.split(self.key)
         toks_dev = sampler.sample(logits, sk, self.temperature)
         t1 = time.perf_counter()
         # dispatch is done; the timer must cover the actual compute too
         toks = np.asarray(jax.block_until_ready(toks_dev))
         t2 = time.perf_counter()
+        bad_rows: List[int] = []
+        if self.nan_guard:
+            # the eager path syncs every step anyway, so a host-side
+            # finite check costs one extra small transfer
+            okv = np.asarray(jnp.isfinite(logits).all(-1))
+            bad_rows = [r for i, r in enumerate(rows) if not okv[i]]
         out = {}
         for i, r in enumerate(rows):
+            if r in bad_rows:
+                continue
             req = self.requests[r]
             req.pending = int(toks[i])
             req.computed_hwm = max(req.computed_hwm, int(ctx[i]))
             out[r] = int(toks[i])
             if len(req.generated) >= req.max_new:
                 req.state = DONE
+        for r in bad_rows:
+            # quarantine: the poisoned token never enters the stream,
+            # the batch keeps decoding without the failed row
+            self.stats["nan_rows"] += 1
+            self._fail_request(r, "nan_logits", flush=False)
         self.stats["steps"] += 1
         self._decode_timing = {"dispatch_time": t1 - t0,
                                "compute_time": t2 - t1}
@@ -1514,15 +1771,44 @@ class DecodeEngine:
             if self._replicated_sharding is not None:
                 tok_in = jax.device_put(tok_in, self._replicated_sharding)
 
+        # injected NaN: corrupt one KV slot of the target's PRIVATE leaf
+        # so the dispatch's attention reads it, poisons that row's
+        # logits, and the row_ok flag catches it at the next flush —
+        # exercising the real corruption path, not a shortcut
+        if self.injector is not None:
+            spec = self.injector.take("nan_logits")
+            if spec is not None:
+                target = spec.rid if spec.rid in rows else rows[0]
+                leaf = self.forest.nodes[self.forest.leaf_of[target]]
+                if (leaf.length >= 2 and len(leaf.requests) == 1
+                        and not leaf.children):
+                    slot = leaf.length - 2
+                    page = leaf.page_ids[slot // self.page_size]
+                    off = slot % self.page_size
+                    self.pool.k = self.pool.k.at[:, page, off].set(
+                        jnp.nan)
+                    self._nan_dirty.append((page, off))
+                    self.stats["faults_injected"] += 1
+                else:       # leaf shared or too short: try again later
+                    self.injector.requeue(spec)
+
         # 4. single dispatch: layers + KV writes + attention + merge +
         #    FFN + unembed + sampling, pool/SSM state donated
         conv_all, ssm_all = self._mamba_carry
         state = step_fn_mod.StepState(self.pool.k, self.pool.v,
                                       conv_all, ssm_all)
         t_d0 = time.perf_counter()
-        toks_dev, self.key, state = self._step_fn(
-            self.params, state, tok_in, self.key, self._fused_base,
-            np.int32(self._fused_delta), self._fused_prepared)
+        if self.mesh is not None:
+            # the sharded step fn has no row_ok output (nan_guard is
+            # rejected with a mesh at construction)
+            toks_dev, self.key, state = self._step_fn(
+                self.params, state, tok_in, self.key, self._fused_base,
+                np.int32(self._fused_delta), self._fused_prepared)
+            ok_dev = None
+        else:
+            toks_dev, ok_dev, self.key, state = self._step_fn(
+                self.params, state, tok_in, self.key, self._fused_base,
+                np.int32(self._fused_delta), self._fused_prepared)
         if self.calibrate and self.mesh is not None:
             # calibration fits against TRUE step seconds, so the async
             # dispatch must block here (costs the overlap; opt-in)
@@ -1530,7 +1816,8 @@ class DecodeEngine:
         dispatch = time.perf_counter() - t_d0
         self.pool.k, self.pool.v = state.pool_k, state.pool_v
         self._mamba_carry = (state.conv, state.ssm)
-        ent = _Deferred(toks_dev, list(rows))
+        ent = _Deferred(toks_dev, list(rows),
+                        ok=ok_dev if self.nan_guard else None)
         self._deferred.append(ent)
         self._last_out = (list(rows), toks_dev)
         self._flushed_since_dispatch = False
@@ -1936,6 +2223,27 @@ class DecodeEngine:
         if not rows:
             return {}
         self._grow_drafts(rows)
+        # injected NaN: poison a committed KV slot of the target's leaf
+        # (as in the fused path) so every verify row of that request —
+        # base query and draft heads — reads it through the verify plan
+        if self.injector is not None:
+            spec = self.injector.take("nan_logits")
+            if spec is not None:
+                target = spec.rid if spec.rid in rows else rows[0]
+                leaf = self.forest.nodes[self.forest.leaf_of[target]]
+                owners = [q for q in leaf.requests if q >= 0]
+                kids = [c for c in leaf.children
+                        if not self.forest.nodes[c].meta.get("draft")]
+                if leaf.length >= 2 and owners == [target] and not kids:
+                    slot = leaf.length - 2
+                    page = leaf.page_ids[slot // self.page_size]
+                    off = slot % self.page_size
+                    self.pool.k = self.pool.k.at[:, page, off].set(
+                        jnp.nan)
+                    self._nan_dirty.append((page, off))
+                    self.stats["faults_injected"] += 1
+                else:
+                    self.injector.requeue(spec)
         tokens, q_pos, w_page, w_off, req_rows, head_rows = \
             self._spec_layout(rows)
         tp0 = time.perf_counter()
@@ -1950,12 +2258,19 @@ class DecodeEngine:
         self.stats["plan_time"] += time.perf_counter() - tp0
         t_d0 = time.perf_counter()
         if self._spec_step_fn is not None:
-            toks = self._spec_verify_fused(tokens, q_pos, w_page, w_off,
-                                           plans)
+            toks, ok = self._spec_verify_fused(tokens, q_pos, w_page,
+                                               w_off, plans)
         else:
-            toks = self._spec_verify_eager(tokens, q_pos, w_page, w_off,
-                                           plans)
+            toks, ok = self._spec_verify_eager(tokens, q_pos, w_page,
+                                               w_off, plans)
         t_d1 = time.perf_counter()
+        if self.nan_guard:
+            # quarantine before commit: a poisoned request's drafts roll
+            # back with it and nothing enters its committed stream
+            for r in list(rows):
+                if not bool(ok[req_rows[r]]):
+                    self.stats["nan_rows"] += 1
+                    self._fail_request(r, "nan_logits", flush=False)
         out = self._spec_commit(rows, toks, head_rows)
         self.stats["steps"] += 1
         self.stats["spec_steps"] += 1
@@ -1998,7 +2313,8 @@ class DecodeEngine:
                 x = x + y
             x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
         logits = T._unembed(self.params, cfg, x)[:, 0]       # (B, V)
-        return np.asarray(jnp.argmax(logits, -1))
+        return (np.asarray(jnp.argmax(logits, -1)),
+                np.asarray(jnp.isfinite(logits).all(-1)))
 
     def _spec_verify_fused(self, tokens, q_pos, w_page, w_off,
                            plans) -> np.ndarray:
@@ -2025,12 +2341,12 @@ class DecodeEngine:
         wo = np.zeros(bucket, np.int32)
         wo[:B] = w_off
         state = step_fn_mod.SpecState(self.pool.k, self.pool.v)
-        toks_dev, state = self._spec_step_fn(
+        toks_dev, ok_dev, state = self._spec_step_fn(
             self.params, state, jnp.asarray(tok), jnp.asarray(qp),
             jnp.asarray(wp), jnp.asarray(wo), tuple(prepared))
         self.pool.k, self.pool.v = state.pool_k, state.pool_v
         self.stats["fused_calls"] += 1
-        return np.asarray(toks_dev)[:B]
+        return np.asarray(toks_dev)[:B], np.asarray(ok_dev)[:B]
 
     def _spec_commit(self, rows: List[int], toks: np.ndarray,
                      head_rows) -> Dict[int, Optional[int]]:
@@ -2098,13 +2414,14 @@ class DecodeEngine:
             self.step()
         self.flush_tokens()
         self._stream_ready()
+        self._notify_done()
         return {r: req.generated for r, req in self.requests.items()}
 
     def release(self, rid: int) -> None:
         self.flush_tokens()
         req = self.requests.pop(rid)
+        self.admission.remove(rid)      # queue entry + EDF bookkeeping
         if req.state == WAITING:
-            self.admission.remove(rid)
             for nid in req.pinned:
                 node = self.forest.nodes.get(nid)
                 if node is not None:
@@ -2116,3 +2433,238 @@ class DecodeEngine:
             self._prefilling.remove(rid)
         if rid in self.forest.leaf_of:
             self._release_kv(rid)
+        self._pending_ref.pop(rid, None)
+
+    # ------------------------------------------------------------------ #
+    # request lifecycle control + fault tolerance (DESIGN.md §12)
+    # ------------------------------------------------------------------ #
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request in any pre-terminal state.
+
+        The KV it holds is released (waiting pins unwound, live drafts
+        rolled back), its stream is closed via ``on_done(rid,
+        "cancelled")``, and already-delivered tokens stand.  Returns
+        ``False`` when the request is unknown or already terminal."""
+        req = self.requests.get(rid)
+        if req is None or req.state in TERMINAL:
+            return False
+        self.flush_tokens()    # deliverable tokens land before closing
+        self._finish(req, CANCELLED, "cancelled")
+        return True
+
+    def _finish(self, req: Request, state: str, reason: str) -> None:
+        """Centralised terminal transition for the failure states.
+
+        Unwinds whatever stage the request is in — waiting (queue entry
+        + pins), prefilling, or running (forest membership, drafts,
+        deferred-token refs) — releases its KV, and closes the stream.
+        ``FAILED`` force-frees the private leaf (possibly-poisoned KV
+        must not become cache content)."""
+        if req.state in TERMINAL and req.kv_freed:
+            return
+        rid = req.rid
+        if req.state == WAITING:
+            self.admission.remove(rid)
+            for nid in req.pinned:
+                node = self.forest.nodes.get(nid)
+                if node is not None:
+                    node.meta["pins"] = node.meta.get("pins", 0) - 1
+                    self._maybe_free_node(node)
+            req.pinned = []
+        else:
+            if rid in self._prefilling:
+                self._prefilling.remove(rid)
+            if rid in self.forest.leaf_of:
+                self._release_kv(rid, force_leaf=state == FAILED)
+            self._pending_ref.pop(rid, None)
+            # the fused epoch's plan references the departed row (and
+            # possibly its freed pages): force a rebuild
+            self._plan_dirty = True
+        req.pending = None
+        req.kv_freed = True
+        req.state = state
+        req.finish_reason = reason
+        self.stats[{CANCELLED: "cancelled", TIMED_OUT: "timed_out",
+                    FAILED: "failed"}[state]] += 1
+        self._fire_on_done(req)
+
+    def _fail_request(self, rid: int, reason: str,
+                      flush: bool = True) -> None:
+        """Quarantine one request as FAILED without poisoning the batch."""
+        req = self.requests.get(rid)
+        if req is None or (req.state in TERMINAL and req.kv_freed):
+            return
+        if flush:
+            self.flush_tokens()
+        if reason == "nan_logits" and self._nan_dirty:
+            # scrub injected NaN slots before the pages return to the
+            # free list: a future tenant must never read them
+            for page, off in self._nan_dirty:
+                self.pool.k = self.pool.k.at[:, page, off].set(0.0)
+            self._nan_dirty = []
+        self._finish(req, FAILED, reason)
+
+    def _fire_on_done(self, req: Request) -> None:
+        """Close the stream exactly once; isolate a raising callback."""
+        if req.notified:
+            return
+        req.notified = True
+        self.admission.remove(req.rid)   # drop EDF deadline bookkeeping
+        try:
+            if self.injector is not None and req.on_done is not None:
+                spec = self.injector.take("callback", rid=req.rid)
+                if spec is not None:
+                    self.stats["faults_injected"] += 1
+                    raise InjectedFault(
+                        spec, f"injected on_done failure for request "
+                              f"{req.rid}")
+            if req.on_done is not None:
+                req.on_done(req.rid, req.finish_reason or "done")
+        except Exception:
+            self.stats["callback_errors"] += 1
+            if req.state == DONE:
+                # the only visible casualty is this request's status
+                if req.rid in self.forest.leaf_of:
+                    self._release_kv(req.rid)
+                    self._plan_dirty = True
+                req.kv_freed = True
+                req.state = FAILED
+                req.finish_reason = "callback_error"
+                self.stats["failed"] += 1
+
+    def _notify_done(self) -> None:
+        """Fire ``on_done`` for normally-completed requests whose stream
+        has fully drained (failure states notify inside ``_finish``)."""
+        for req in list(self.requests.values()):
+            if req.state != DONE or req.notified:
+                continue
+            if req.on_token is not None and req.emitted < len(
+                    req.generated):
+                continue    # tokens still deferred: next boundary
+            req.finish_reason = req.finish_reason or "done"
+            self._fire_on_done(req)
+
+    def _enforce_deadlines(self) -> None:
+        """Step-boundary deadline sweep over every pre-terminal request
+        (the waiting queue included): expired requests transition to
+        TIMED_OUT with their KV released and their stream closed."""
+        now = self.clock()
+        for req in list(self.requests.values()):
+            if req.state in TERMINAL:
+                continue
+            if req.deadline is not None and now >= req.deadline:
+                self.flush_tokens()
+                self._finish(req, TIMED_OUT, "deadline")
+            elif (req.state == WAITING and req.queue_deadline is not None
+                  and now >= req.queue_deadline):
+                self._finish(req, TIMED_OUT, "queue_timeout")
+
+    def check(self) -> None:
+        """Serving-time invariant self-check (raises
+        :class:`~repro.serving.faults.EngineInvariantError`).
+
+        Consolidates the allocator's structural ``check()`` with the
+        engine-level cross-structure invariants: every allocated page is
+        owned by exactly one forest node (replicas and draft pages
+        included), pin refcounts equal the waiting holders' pin lists,
+        ``leaf_of`` is coherent with request states, deferred-token refs
+        point at live deferred rows, and cache residency fits the pool.
+        Run after every dispatch recovery and every ``check_every``
+        steps; cheap enough for tests to call after each scenario."""
+        self.stats["invariant_checks"] += 1
+        failures: List[str] = []
+        try:
+            self.forest.validate()
+        except AssertionError as e:
+            failures.append(f"forest: {e}")
+        try:
+            self.pool.allocator.check()
+        except AssertionError as e:
+            failures.append(f"allocator: {e}")
+        owned: Dict[int, int] = {}
+        for node in self.forest.nodes.values():
+            if node.id == tree_mod.ROOT_ID:
+                continue
+            reps = node.meta.get("replicas")
+            pages = ([p for run in reps.values() for p in run]
+                     if reps is not None else node.page_ids)
+            for p in pages:
+                owned[p] = owned.get(p, 0) + 1
+        for p, n in owned.items():
+            if n != 1:
+                failures.append(f"page {p} owned by {n} nodes")
+        used = self.pool.allocator.used_page_ids()
+        leaked = sorted(set(used) - set(owned))
+        dangling = sorted(set(owned) - set(used))
+        if leaked:
+            failures.append(
+                f"{len(leaked)} leaked page(s) (allocated, owned by no "
+                f"node): {leaked[:8]}")
+        if dangling:
+            failures.append(
+                f"{len(dangling)} dangling page(s) (node-owned, not "
+                f"allocated): {dangling[:8]}")
+        pin_count: Dict[int, int] = {}
+        for req in self.requests.values():
+            for nid in req.pinned:
+                pin_count[nid] = pin_count.get(nid, 0) + 1
+        for node in self.forest.nodes.values():
+            pins = node.meta.get("pins", 0)
+            if pins != pin_count.get(node.id, 0):
+                failures.append(
+                    f"node {node.id} pins={pins} but "
+                    f"{pin_count.get(node.id, 0)} holder(s) list it")
+        for rid, req in self.requests.items():
+            if (req.state in (PREFILL, RUNNING)
+                    and rid not in self.forest.leaf_of):
+                failures.append(f"live request {rid} has no forest leaf")
+            if req.state == WAITING and rid in self.forest.leaf_of:
+                failures.append(
+                    f"waiting request {rid} still in the forest")
+            if (req.state in TERMINAL and req.kv_freed
+                    and rid in self.forest.leaf_of):
+                failures.append(
+                    f"finished request {rid} still holds forest KV")
+        draft_virts = {v for st in self._drafts.values()
+                       for v in st.virts}
+        for rid in self.forest.leaf_of:
+            if rid >= 0 and rid not in self.requests:
+                failures.append(
+                    f"forest request {rid} unknown to the engine")
+            if rid < 0 and rid not in draft_virts:
+                failures.append(
+                    f"virtual query {rid} without a draft tree")
+        for rid in self._pending_ref:
+            req = self.requests.get(rid)
+            if req is None or req.pending is not PENDING_DEVICE:
+                failures.append(
+                    f"dangling deferred-token ref for request {rid}")
+        if self.cache is not None:
+            resident = self.cache.resident_pages()
+            total_used = sum(used.values()) if used else 0
+            if resident > total_used:
+                failures.append(
+                    f"cache claims {resident} resident pages but only "
+                    f"{total_used} are allocated")
+        if failures:
+            raise EngineInvariantError(failures)
+
+    def shutdown(self) -> Dict[str, int]:
+        """Graceful teardown: cancel all outstanding work, drop finished
+        and cached KV, self-check, and return a leak summary
+        (``used_pages`` must be 0 after a clean shutdown)."""
+        for rid in sorted(self.requests):
+            if self.requests[rid].state not in TERMINAL:
+                self.cancel(rid)
+        self.flush_tokens()
+        self._stream_ready()
+        self._notify_done()
+        for rid, req in sorted(self.requests.items()):
+            if rid in self.forest.leaf_of:    # DONE, KV still resident
+                self._release_kv(rid)
+                req.kv_freed = True
+        if self.cache is not None:
+            self._evict_cached(self.pool.num_pages)
+        self.check()
+        return {"used_pages": self.pool.allocator.num_used,
+                "requests": len(self.requests)}

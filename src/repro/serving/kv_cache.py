@@ -66,6 +66,11 @@ class PageAllocator:
                 del self._refs[p]
                 self._free.append(p)
 
+    def used_page_ids(self) -> Dict[int, int]:
+        """Snapshot of allocated pages -> refcount (``DecodeEngine.check``
+        cross-references this against forest node ownership)."""
+        return dict(self._refs)
+
     def check(self) -> None:
         """Structural invariants (tests call this after workloads)."""
         free = set(self._free)

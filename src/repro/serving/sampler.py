@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
@@ -14,8 +15,16 @@ def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
     ``i``'s sample is independent of the batch row count — the fused
     decode path pads the batch to a bucket size, and padded rows must
     not perturb real rows' draws.
+
+    ``temperature`` is a python float (a trace-time constant inside the
+    fused step), so validation here costs nothing on device.
     """
-    if temperature <= 0.0:
+    temperature = float(temperature)
+    if temperature < 0.0 or not np.isfinite(temperature):
+        raise ValueError(
+            f"temperature must be finite and >= 0 (0 = greedy argmax), "
+            f"got {temperature}")
+    if temperature == 0.0:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:

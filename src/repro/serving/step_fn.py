@@ -101,7 +101,7 @@ def make_spec_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...]):
     Returns a jitted callable
 
         ``fn(params, state, tokens, q_pos, write_page, write_off,
-        prepared) -> (greedy_tokens, state')``
+        prepared) -> (greedy_tokens, row_ok, state')``
 
     scoring a whole batch of verification queries — every request's
     committed-tail base query plus one query per draft-tree node — in
@@ -153,7 +153,8 @@ def make_spec_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...]):
             cfg, params, body, (x, state.pool_k, state.pool_v))
         logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        return toks, SpecState(pool_k, pool_v)
+        ok = jnp.isfinite(logits).all(-1)                   # (B,) NaN guard
+        return toks, ok, SpecState(pool_k, pool_v)
 
     return jax.jit(step, donate_argnums=(1,))
 
@@ -165,7 +166,13 @@ def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
     Returns a jitted callable
 
         ``fn(params, state, tokens, key, base, delta, prepared)
-        -> (tokens', key', state')``
+        -> (tokens', row_ok, key', state')``
+
+    ``row_ok`` is a per-row finite-logits flag — essentially free to
+    compute (one reduction over an array already resident for sampling)
+    and carried with the deferred token array so the engine's optional
+    NaN guard can quarantine a poisoned row at the next flush without
+    adding a sync point.
 
     where ``state`` (:class:`StepState`) is donated, ``tokens`` is the
     (bucketed) batch of tokens appended this step, ``delta`` the
@@ -226,6 +233,7 @@ def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
         logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
         key, sk = jax.random.split(key)
         toks = sampler.sample(logits, sk, temperature)
-        return toks, key, StepState(pool_k, pool_v, conv_all, ssm_all)
+        ok = jnp.isfinite(logits).all(-1)                   # (B,) NaN guard
+        return toks, ok, key, StepState(pool_k, pool_v, conv_all, ssm_all)
 
     return jax.jit(step, donate_argnums=(1,))

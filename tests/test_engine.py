@@ -323,7 +323,7 @@ def test_staggered_finish_and_late_arrivals():
 def test_engine_oom_raises():
     eng, cfg, params = _engine("qwen2.5-14b", num_pages=4)
     with pytest.raises(MemoryError):
-        eng.add_request(list(range(1000)), max_new=2)
+        eng.add_request([i % 250 for i in range(1000)], max_new=2)
 
 
 def test_oversized_prompt_queues_under_chunked_prefill():
@@ -333,14 +333,15 @@ def test_oversized_prompt_queues_under_chunked_prefill():
     decides servability; larger prompts stay queued."""
     eng, cfg, params = _engine("qwen2.5-14b", num_pages=8,
                                prefill_chunk=16)
-    rid = eng.add_request(list(range(1000)), max_new=2)   # 63 total pages
+    rid = eng.add_request([i % 250 for i in range(1000)],
+                          max_new=2)                      # 63 total pages
     assert eng.requests[rid].state == "waiting"           # queued, no raise
     eng.step()
     assert eng.requests[rid].state == "waiting"
     # whole-prompt prefill (no chunking) still fails fast
     with pytest.raises(MemoryError):
         _engine("qwen2.5-14b", num_pages=8)[0].add_request(
-            list(range(1000)), max_new=2)
+            [i % 250 for i in range(1000)], max_new=2)
 
 
 def test_split_while_pinned_keeps_both_halves_protected():

@@ -1,0 +1,404 @@
+"""Fault-tolerant serving (DESIGN.md §12): lifecycle control, fault
+injection, graceful degradation, invariant self-checks.
+
+The contracts under test:
+
+* request lifecycle — ``cancel()``, per-request deadlines and queue
+  timeouts (on an injectable clock) reach clean terminal states with
+  their KV released and their ``on_done`` stream-close fired once;
+* fault seams — seeded alloc/dispatch/NaN/callback/stall schedules
+  are absorbed with surviving streams byte-identical to a fault-free
+  run (the engine's core robustness claim);
+* isolation — a raising user callback fails only its own request;
+* ``engine.check()`` — planted state corruption is detected;
+* validation — malformed requests are rejected at ``add_request``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.scheduler import AdmissionController
+from repro.models import transformer as T
+from repro.serving import sampler
+from repro.serving.engine import (CANCELLED, DONE, FAILED, TIMED_OUT,
+                                  DecodeEngine)
+from repro.serving.faults import (KINDS, EngineInvariantError,
+                                  FaultInjector, FaultPlan, FaultSpec)
+
+CFG = smoke_config("qwen2.5-14b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+DOC = list(range(10, 42))                 # 32 in-vocab tokens
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _engine(**kw):
+    defaults = dict(page_size=16, num_pages=128, backend="codec-xla",
+                    max_q=8, temperature=0.0)
+    defaults.update(kw)
+    return DecodeEngine(CFG, PARAMS, **defaults)
+
+
+def _prompts(n=3):
+    return [DOC + [100 + 5 * i + j for j in range(3)] for i in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# fault plan / injector units
+# --------------------------------------------------------------------- #
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse("dispatch@3*2, nan_logits@5:1, stall@8=0.01")
+    by_kind = {s.kind: s for s in plan}
+    assert by_kind["dispatch"].times == 2
+    assert by_kind["nan_logits"].rid == 1
+    assert by_kind["stall"].payload == 0.01
+    assert len(FaultPlan.parse("")) == 0
+    seeded = FaultPlan.parse("seed:7:0.5")
+    assert len(seeded) > 0
+    # seeded schedules are reproducible byte-for-byte
+    assert seeded.specs == FaultPlan.seeded(7, rate=0.5).specs
+    with pytest.raises(ValueError):
+        FaultPlan.parse("dispatch3")           # missing @step
+    with pytest.raises(ValueError):
+        FaultPlan([FaultSpec("frobnicate", 0)])
+
+
+def test_injector_take_requeue_times():
+    plan = FaultPlan([FaultSpec("dispatch", 2, times=2),
+                      FaultSpec("nan_logits", 1, rid=5)])
+    inj = FaultInjector(plan)
+    inj.tick(0)
+    assert inj.take("dispatch") is None         # not due yet
+    inj.tick(2)
+    assert inj.take("dispatch").times == 2      # fires twice
+    assert inj.take("dispatch") is not None
+    assert inj.take("dispatch") is None         # exhausted
+    assert inj.take("nan_logits", rid=3) is None   # targeted elsewhere
+    spec = inj.take("nan_logits", rid=5)
+    assert spec is not None
+    inj.requeue(spec)                           # seam couldn't apply
+    assert inj.pending() == 1
+    assert inj.take("nan_logits", rid=5) is spec
+    assert inj.pending() == 0
+    assert inj.total_fired == 3
+    assert inj.fired == {**{k: 0 for k in KINDS},
+                         "dispatch": 2, "nan_logits": 1}
+
+
+def test_edf_admission_order():
+    from repro.core.cost_model import CostModel
+    from repro.core.scheduler import AdmissionPolicy
+    ac = AdmissionController(AdmissionPolicy(),
+                             CostModel(CFG.num_heads, CFG.num_kv_heads,
+                                       CFG.head_dim, page_size=16), 16)
+    ac.push(0)                    # no deadline -> back of the queue
+    ac.push(1, deadline=9.0)
+    ac.push(2, deadline=3.0)      # earliest deadline first
+    ac.push(3, deadline=9.0)      # FIFO among equal deadlines
+    assert list(ac.queue) == [2, 1, 3, 0]
+    ac.remove(1)
+    ac.remove(1)                  # tolerant of absence
+    assert list(ac.queue) == [2, 3, 0]
+    assert ac.pop() == 2
+
+
+# --------------------------------------------------------------------- #
+# input validation
+# --------------------------------------------------------------------- #
+def test_add_request_rejects_malformed():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.add_request([], max_new=4)                  # empty prompt
+    with pytest.raises(ValueError):
+        eng.add_request([1, 2], max_new=0)              # nothing to do
+    with pytest.raises(ValueError):
+        eng.add_request([1, CFG.vocab_size], max_new=4)  # out of vocab
+    with pytest.raises(ValueError):
+        eng.add_request([1, -3], max_new=4)
+    with pytest.raises(ValueError):
+        eng.add_request([1.5, 2.5], max_new=4)          # non-integer
+    with pytest.raises(ValueError):
+        eng.add_request([1, 2], max_new=4, deadline_s=-1.0)
+    assert not eng.requests                     # nothing half-admitted
+    assert eng.pool.num_free == eng.pool.num_pages
+
+
+def test_sampler_rejects_bad_temperature():
+    logits = np.zeros((1, 8), np.float32)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        sampler.sample(logits, key, -0.5)
+    with pytest.raises(ValueError):
+        sampler.sample(logits, key, float("nan"))
+
+
+# --------------------------------------------------------------------- #
+# lifecycle: cancel / deadline / queue timeout / on_done
+# --------------------------------------------------------------------- #
+def test_cancel_releases_kv_and_fires_on_done():
+    done = {}
+    eng = _engine()
+    rids = [eng.add_request(p, max_new=6,
+                            on_done=lambda r, why: done.setdefault(r, why))
+            for p in _prompts(2)]
+    eng.step(); eng.step()                      # mid-flight
+    assert eng.cancel(rids[0])
+    assert eng.requests[rids[0]].state == CANCELLED
+    assert done[rids[0]] == "cancelled"
+    assert not eng.cancel(rids[0])              # already terminal
+    assert not eng.cancel(999)                  # unknown rid
+    eng.run(16)
+    assert eng.requests[rids[1]].state == DONE
+    assert done[rids[1]] == "done"
+    # the cancelled request's private KV is gone; nothing leaks
+    assert eng.shutdown()["used_pages"] == 0
+    assert eng.stats["cancelled"] == 1
+
+
+def test_cancel_waiting_request_leaves_queue():
+    clock = FakeClock()
+    eng = _engine(max_running=1, clock=clock)
+    r0 = eng.add_request(_prompts(2)[0], max_new=4)
+    r1 = eng.add_request(_prompts(2)[1], max_new=4)
+    eng.step()
+    assert eng.requests[r1].state == "waiting"
+    assert eng.cancel(r1)
+    assert r1 not in eng.admission.queue
+    eng.run(16)
+    assert eng.requests[r0].state == DONE
+    assert eng.shutdown()["used_pages"] == 0
+
+
+def test_deadline_times_out_midflight():
+    clock = FakeClock()
+    done = {}
+    eng = _engine(clock=clock)
+    r0 = eng.add_request(_prompts(2)[0], max_new=8, deadline_s=2.5,
+                         on_done=lambda r, why: done.setdefault(r, why))
+    r1 = eng.add_request(_prompts(2)[1], max_new=4)
+    for _ in range(8):
+        eng.step()
+        clock.t += 1.0
+    assert eng.requests[r0].state == TIMED_OUT
+    assert done[r0] == "deadline"
+    assert len(eng.requests[r0].generated) <= 3
+    assert eng.requests[r1].state == DONE       # neighbour unharmed
+    assert eng.stats["timed_out"] == 1
+    assert eng.shutdown()["used_pages"] == 0
+
+
+def test_queue_timeout_before_admission():
+    clock = FakeClock()
+    eng = _engine(max_running=1, clock=clock)
+    r0 = eng.add_request(_prompts(2)[0], max_new=8)
+    r1 = eng.add_request(_prompts(2)[1], max_new=4, max_queue_s=1.5)
+    for _ in range(4):
+        eng.step()
+        clock.t += 1.0
+    assert eng.requests[r1].state == TIMED_OUT
+    assert eng.requests[r1].finish_reason == "queue_timeout"
+    assert eng.requests[r1].generated == []
+    eng.run(16)
+    assert eng.requests[r0].state == DONE
+
+
+# --------------------------------------------------------------------- #
+# callback isolation (regression: a raising on_token used to unwind
+# the whole step, poisoning every request in the batch)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("fused", [False, True])
+def test_raising_on_token_fails_only_its_request(fused):
+    streams = {}
+
+    def good(rid, tok):
+        streams.setdefault(rid, []).append(tok)
+
+    def bad(rid, tok):
+        raise RuntimeError("user bug")
+
+    eng = _engine(fused=fused)
+    rids = [eng.add_request(p, max_new=4,
+                            on_token=bad if i == 1 else good)
+            for i, p in enumerate(_prompts(3))]
+    eng.run(16)
+    assert eng.requests[rids[1]].state == FAILED
+    assert eng.requests[rids[1]].finish_reason == "callback_error"
+    assert eng.stats["callback_errors"] == 1
+    # survivors decoded to completion, streams intact
+    ref = _engine(fused=fused)
+    for p in _prompts(3):
+        ref.add_request(p, max_new=4)
+    expect = ref.run(16)
+    for i in (0, 2):
+        assert eng.requests[rids[i]].state == DONE
+        assert streams[rids[i]] == expect[rids[i]]
+    assert eng.shutdown()["used_pages"] == 0
+
+
+def test_raising_on_done_counts_but_other_streams_survive():
+    def bad_done(rid, why):
+        raise RuntimeError("user bug in close")
+
+    eng = _engine()
+    r0 = eng.add_request(_prompts(2)[0], max_new=3, on_done=bad_done)
+    r1 = eng.add_request(_prompts(2)[1], max_new=3)
+    eng.run(16)
+    assert eng.requests[r0].state == FAILED
+    assert eng.requests[r0].finish_reason == "callback_error"
+    assert len(eng.requests[r0].generated) == 3   # tokens were streamed
+    assert eng.requests[r1].state == DONE
+    assert eng.stats["callback_errors"] == 1
+    assert eng.shutdown()["used_pages"] == 0
+
+
+# --------------------------------------------------------------------- #
+# injected faults: recovery + survivor parity
+# --------------------------------------------------------------------- #
+def _run_plain(max_new=4, **kw):
+    eng = _engine(**kw)
+    for p in _prompts(3):
+        eng.add_request(p, max_new=max_new)
+    return eng.run(24), eng
+
+
+def test_alloc_and_dispatch_faults_are_absorbed():
+    expect, ref = _run_plain()
+    plan = FaultPlan([FaultSpec("alloc", 0),
+                      FaultSpec("dispatch", 1, times=2),
+                      FaultSpec("stall", 2, payload=0.001)])
+    eng = _engine(faults=plan)
+    for p in _prompts(3):
+        eng.add_request(p, max_new=4)
+    out = eng.run(24)
+    assert out == expect                       # streams byte-identical
+    assert eng.stats["dispatch_failures"] == 2
+    assert eng.stats["dispatch_recoveries"] == 2
+    assert eng.injector.pending() == 0
+    eng.check()
+    assert eng.shutdown()["used_pages"] == 0
+
+
+def test_dispatch_ladder_exhaustion_raises():
+    # more consecutive failures than the bounded retry allows: the
+    # step surfaces the ResourceExhausted instead of looping forever
+    from repro.serving.faults import ResourceExhausted
+    plan = FaultPlan([FaultSpec("dispatch", 0, times=99)])
+    eng = _engine(faults=plan, max_dispatch_retries=2)
+    eng.add_request(_prompts(1)[0], max_new=4)
+    with pytest.raises(ResourceExhausted):
+        eng.run(8)
+    eng.check()                                # state still consistent
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_nan_injection_quarantines_row(fused):
+    expect, _ = _run_plain(fused=fused)
+    plan = FaultPlan([FaultSpec("nan_logits", 2, rid=1)])
+    eng = _engine(fused=fused, nan_guard=True, faults=plan)
+    rids = [eng.add_request(p, max_new=4) for p in _prompts(3)]
+    eng.run(24)
+    assert eng.requests[rids[1]].state == FAILED
+    assert eng.requests[rids[1]].finish_reason == "nan_logits"
+    assert eng.stats["nan_rows"] >= 1
+    # the poisoned token never streamed; survivors are byte-identical
+    assert expect[rids[1]][:len(eng.requests[rids[1]].generated)] \
+        == eng.requests[rids[1]].generated
+    for r in (rids[0], rids[2]):
+        assert eng.requests[r].state == DONE
+        assert eng.requests[r].generated == expect[r]
+    eng.check()
+    assert eng.shutdown()["used_pages"] == 0
+
+
+def test_nan_guard_with_mesh_rejected():
+    from repro.distributed.mesh import decode_mesh
+    with pytest.raises(ValueError):
+        _engine(nan_guard=True, mesh=decode_mesh(1, 1))
+
+
+# --------------------------------------------------------------------- #
+# invariant self-check
+# --------------------------------------------------------------------- #
+def test_check_passes_live_and_catches_planted_corruption():
+    eng = _engine()
+    rid = eng.add_request(_prompts(1)[0], max_new=4)
+    eng.step(); eng.step()
+    eng.check()                                  # healthy mid-flight
+    # plant: a page id the allocator never handed out
+    leaf = eng.forest.nodes[eng.forest.leaf_of[rid]]
+    free_page = max(set(range(eng.pool.num_pages))
+                    - set(eng.pool.allocator.used_page_ids()))
+    leaf.page_ids.append(free_page)
+    with pytest.raises(EngineInvariantError) as ei:
+        eng.check()
+    assert any("page" in f for f in ei.value.failures)
+    leaf.page_ids.pop()
+    eng.check()
+    # plant: a pin the request never took
+    eng.requests[rid].pinned.append(leaf.id)
+    with pytest.raises(EngineInvariantError):
+        eng.check()
+
+
+def test_check_every_runs_periodically():
+    eng = _engine(check_every=2)
+    eng.add_request(_prompts(1)[0], max_new=6)
+    eng.run(16)
+    assert eng.stats["invariant_checks"] >= 3
+
+
+# --------------------------------------------------------------------- #
+# property: chaos mix always quiesces, in every engine mode
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["eager", "fused", "cached", "spec"])
+def test_chaos_mix_quiesces_all_modes(mode):
+    kw = {}
+    if mode == "fused":
+        kw["fused"] = True
+    elif mode == "cached":
+        from repro.serving.cache import CachePolicy
+        kw["cache"] = CachePolicy()
+    elif mode == "spec":
+        from repro.serving.speculation import SpecConfig
+        kw["speculative"] = SpecConfig(depth=2, branch=2, max_nodes=3)
+
+    # alloc seams are only visited on admission/growth (and gated off
+    # under speculation), so the seeded draw sticks to always-visited
+    # kinds and alloc gets one pinned spec that meets the first prefill
+    kinds = tuple(k for k in KINDS if k != "alloc")
+    specs = list(FaultPlan.seeded(11, steps=6, rate=0.2,
+                                  kinds=kinds).specs)
+    specs += [FaultSpec("dispatch", 1), FaultSpec("nan_logits", 3)]
+    if mode != "spec":
+        specs.append(FaultSpec("alloc", 0))
+    clock = FakeClock()
+    eng = _engine(faults=FaultPlan(specs), nan_guard=True,
+                  check_every=3, clock=clock, **kw)
+    rids = [eng.add_request(p, max_new=4,
+                            deadline_s=2.5 if i == 2 else None)
+            for i, p in enumerate(_prompts(3))]
+    eng.cancel(rids[0])
+    for _ in range(40):
+        if not eng.has_work():
+            break
+        eng.step()
+        clock.t += 1.0
+    assert not eng.has_work(), "chaos mix did not drain"
+    assert all(q.finished for q in eng.requests.values())
+    # with this tiny workload the engine may drain before every seeded
+    # spec's seam is revisited; full-schedule quiescence is asserted by
+    # benchmarks/chaos_replay.py on the larger CI workload
+    assert eng.injector.total_fired > 0
+    for q in eng.requests.values():
+        if q.state == FAILED:
+            assert q.finish_reason in ("nan_logits", "callback_error")
+    eng.check()
+    assert eng.shutdown()["used_pages"] == 0

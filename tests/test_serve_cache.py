@@ -32,7 +32,7 @@ def _engine(**kw):
 
 def _wave(i, n=3):
     """n prompts sharing DOC, with wave- and request-unique tails."""
-    return [DOC + [200 + 10 * i + k, 300 + k] for k in range(n)]
+    return [DOC + [200 + 10 * i + k, 250 + k] for k in range(n)]
 
 
 # --------------------------------------------------------------------- #
@@ -149,7 +149,7 @@ def test_ttl_eviction_empties_cache():
 
 def test_max_pages_cap_evicts_lru_first():
     doc_a = list(range(100, 164))    # each doc: 4 pages (+1 tail page)
-    doc_b = list(range(300, 364))
+    doc_b = list(range(0, 64))       # disjoint from doc_a, in-vocab
     eng = _engine(cache=CachePolicy(max_pages=5), num_pages=256)
     eng.add_request(doc_a + [1, 2], max_new=2)
     eng.run(16)
@@ -171,8 +171,8 @@ def test_pressure_reclaims_cache_before_preempting():
     assert eng.cache.resident_pages() > 0
     # two fresh disjoint requests outgrow the free list: the cached doc
     # is the FIRST reclaim tier, so no live request gets preempted
-    r1 = eng.add_request(list(range(300, 348)), max_new=4)
-    r2 = eng.add_request(list(range(400, 448)), max_new=4)
+    r1 = eng.add_request(list(range(0, 48)), max_new=4)
+    r2 = eng.add_request(list(range(192, 240)), max_new=4)
     eng.run(32)
     assert len(eng.requests[r1].generated) == 4
     assert len(eng.requests[r2].generated) == 4

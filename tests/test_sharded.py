@@ -246,7 +246,7 @@ SHARDED_PARITY = textwrap.dedent("""\
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     DOC = list(range(10, 58))                      # 6-page shared prefix
     PROMPTS = [DOC + [100 + 3 * i + j for j in range(3)] for i in range(4)]
-    LATE = DOC + [300, 301]                        # arrives mid-decode
+    LATE = DOC + [250, 251]                        # arrives mid-decode
 
     def run(mesh=None, temperature=0.0, num_pages=256, prefill_chunk=None,
             fused=True, check_leaks=True, replicate=False):

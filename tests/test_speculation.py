@@ -200,7 +200,7 @@ def test_admission_concurrent_with_inflight_draft_tree():
     draft_tok = int(eng.forest.nodes[st.nodes[0]].tokens[0])
     # a second request arrives whose prompt extends into the draft
     committed = list(eng.requests[r0].seq)
-    r1 = eng.add_request(committed + [draft_tok, 999], max_new=2)
+    r1 = eng.add_request(committed + [draft_tok, 251], max_new=2)
     path1 = eng.forest.path(r1)
     assert all(not n.meta.get("draft") for n in path1)
     # the draft tree must still roll back cleanly (pre-fix: AssertionError)
