@@ -113,10 +113,12 @@ def build_plan(args, mode) -> FaultPlan:
 
 
 def make_engine(cfg, params, args, mode, faults=None, clock=None):
+    # telemetry=True: counters ride the fake step clock, so the chaos
+    # report below can source everything from the metrics registry
     kw = dict(page_size=args.page_size, num_pages=args.num_pages,
               backend="codec-xla", max_q=max(8, args.requests),
               temperature=0.0, faults=faults, nan_guard=True,
-              check_every=4, clock=clock)
+              check_every=4, clock=clock, telemetry=True)
     if mode == "fused":
         kw["fused"] = True
     elif mode == "cached":
@@ -209,10 +211,14 @@ def run_mode(cfg, params, args, mode):
     rec["faults_pending"] = eng.injector.pending()
     rec["outcomes"] = {r: reasons.get(r, eng.requests[r].finish_reason)
                        for r in sorted(eng.requests)}
-    rec["stats"] = {k: st[k] for k in (
+    # reported counters come from the metrics registry, not the raw
+    # stats dict — publish_metrics() syncs and returns it
+    reg = eng.publish_metrics()
+    rec["stats"] = {k: reg[k].value for k in (
         "faults_injected", "dispatch_failures", "dispatch_recoveries",
-        "nan_rows", "callback_errors", "cancelled", "timed_out",
-        "failed", "invariant_checks", "preempted")}
+        "nan_rows", "callback_errors", "requests_cancelled",
+        "requests_timed_out", "requests_failed", "invariant_checks",
+        "preemptions")}
 
     # survivor parity: done requests stream byte-identical to baseline
     survivors = [r for r, q in eng.requests.items() if q.state == DONE]
@@ -269,7 +275,7 @@ def run_mode(cfg, params, args, mode):
 
     rec["ok"] = not rec["violations"]
     print(f"[{mode}] {'ok' if rec['ok'] else 'FAIL'}: "
-          f"{st['faults_injected']} faults "
+          f"{rec['stats']['faults_injected']:.0f} faults "
           f"({rec['faults_fired']}), survivors "
           f"{rec['survivors']}/{args.requests}, outcomes "
           f"{rec['outcomes']}, leaked {leaked} pages")

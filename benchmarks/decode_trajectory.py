@@ -21,8 +21,10 @@ import jax
 
 from benchmarks.common import emit
 from repro.configs import smoke_config
+from repro.core import metrics as metrics_mod
 from repro.models import transformer as T
 from repro.serving.engine import DecodeEngine
+from repro.serving.telemetry import Telemetry
 
 ARCH = os.environ.get("BENCH_DECODE_ARCH", "qwen2.5-14b")
 BACKEND = os.environ.get("BENCH_DECODE_BACKEND", "codec-xla")
@@ -34,14 +36,20 @@ MAX_NEW = 16
 
 
 def _snapshot(eng):
-    keys = ("steps", "replans", "decode_time", "decode_dispatch_time",
-            "decode_sync_time", "token_flushes", "fused_calls",
-            "prefill_tokens")
-    return {k: eng.stats[k] for k in keys}
+    return eng.publish_metrics().snapshot()
 
 
 def _delta(a, b):
-    return {k: b[k] - a[k] for k in a}
+    """Pass summary from a metrics-registry delta: counters map to the
+    legacy stat names, timing comes from the histogram sums."""
+    d = metrics_mod.delta(b, a)
+    return {"steps": d["decode_steps"]["value"],
+            "replans": d["plan_rebuilds"]["value"],
+            "token_flushes": d["token_flushes"]["value"],
+            "fused_calls": d["fused_dispatches"]["value"],
+            "prefill_tokens": d["prefill_tokens"]["value"],
+            "decode_dispatch_time": d["dispatch_s"]["sum"],
+            "decode_sync_time": d["flush_s"]["sum"]}
 
 
 def _drive(eng, prompts):
@@ -62,7 +70,8 @@ def _drive(eng, prompts):
 def run_engine(cfg, params, doc, fused):
     eng = DecodeEngine(cfg, params, page_size=PAGE, num_pages=2048,
                        backend=BACKEND, max_q=max(REQUESTS, 8),
-                       temperature=0.0, fused=fused)
+                       temperature=0.0, fused=fused,
+                       telemetry=Telemetry())
     passes = []
     for pno in range(2):
         prompts = [doc + [200 + 16 * pno + 4 * i + j for j in range(4)]

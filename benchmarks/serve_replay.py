@@ -12,6 +12,13 @@ resident (new per-request tails, so only the shared prefixes can hit).
 ``BENCH_serve.json`` records p50/p99 TTFT and TPOT for both passes plus
 the warm-pass cache counters, giving CI a cold-vs-warm baseline.
 
+All reported numbers come from the engine's metrics registry
+(docs/OBSERVABILITY.md): each pass snapshots the registry and takes a
+reader-owned delta, so two readers at different cadences can never
+double-count.  ``--trace-out``/``--metrics-out`` export the Chrome
+trace and the registry snapshot; ``telemetry_overhead`` measures TPOT
+with telemetry on vs off (asserted <3% on the smoke preset).
+
 Wall-clock caveat (see benchmarks/common.py): absolute latencies on
 this CPU container are not the deliverable; the cold/warm *ratio* and
 the hit-rate are the signal.
@@ -21,15 +28,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.core import metrics as metrics_mod
 from repro.models import transformer as T
 from repro.serving.cache import CachePolicy
 from repro.serving.engine import DecodeEngine
+from repro.serving.telemetry import Telemetry
 
 PRESETS = {
     # CI-sized: two shared docs, six requests per pass, tiny tails.
@@ -106,18 +116,71 @@ def replay(eng, schedule, max_new, max_steps=100_000):
     return recs
 
 
-def summarize(recs, max_new):
-    ttft = np.asarray([(r["first"] - r["submit"]) * 1e3 for r in recs])
-    tpot = np.asarray([(r["last"] - r["first"]) / (len(r["toks"]) - 1)
-                       * 1e3 for r in recs if len(r["toks"]) > 1])
+def check_streams(recs, max_new):
     assert all(len(r["toks"]) == max_new for r in recs), \
         "every request must stream its full generation"
-    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+
+
+def registry_summary(d, eng):
+    """Per-pass summary from a metrics-registry snapshot delta.
+
+    The registry is the single source: TTFT/TPOT from the histogram
+    deltas (submit -> token host-visible, on the engine clock), cache
+    counters from the synced cache_* counters."""
+    q = lambda h, p: 1e3 * metrics_mod.hist_quantile(h, p)
+    hits = d["cache_hits"]["value"]
+    misses = d["cache_misses"]["value"]
     return {
-        "requests": len(recs),
-        "ttft_ms": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
-        "tpot_ms": {"p50": pct(tpot, 50), "p99": pct(tpot, 99)},
+        "requests": int(d["requests_done"]["value"]),
+        "tokens": int(d["tokens_generated"]["value"]),
+        "ttft_ms": {"p50": q(d["ttft_s"], 0.50),
+                    "p99": q(d["ttft_s"], 0.99)},
+        "tpot_ms": {"p50": q(d["tpot_s"], 0.50),
+                    "p99": q(d["tpot_s"], 0.99)},
+        "cache": {
+            "hits": hits, "misses": misses,
+            "hit_tokens": d["cache_hit_tokens"]["value"],
+            "hit_rate": hits / max(hits + misses, 1),
+            "evicted_nodes": d["cache_evicted_nodes"]["value"],
+            "resident_pages": eng.cache.resident_pages(),
+        },
     }
+
+
+def mean_tpot_ms(recs):
+    vals = [(r["last"] - r["first"]) / (len(r["toks"]) - 1) * 1e3
+            for r in recs if len(r["toks"]) > 1]
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def measure_overhead(args, cfg, params, schedule, reps):
+    """TPOT with telemetry on vs off: fresh engine per rep, identical
+    schedule, min-of-reps each way to squeeze out scheduler noise.
+    Also asserts the token streams are byte-identical on vs off."""
+
+    def one(enabled):
+        best, streams = float("inf"), None
+        for _ in range(reps):
+            eng = DecodeEngine(
+                cfg, params, page_size=args.page_size,
+                num_pages=args.num_pages, backend=args.backend,
+                max_q=max(8, args.requests), temperature=0.0,
+                fused=args.fused,
+                cache=CachePolicy(ttl_steps=args.cache_ttl,
+                                  max_pages=args.cache_pages),
+                telemetry=Telemetry() if enabled else None)
+            recs = replay(eng, schedule, args.max_new)
+            check_streams(recs, args.max_new)
+            best = min(best, mean_tpot_ms(recs))
+            streams = [r["toks"] for r in recs]
+        return best, streams
+
+    off, streams_off = one(False)   # off first: warms any jit caches
+    on, streams_on = one(True)
+    assert streams_on == streams_off, \
+        "telemetry must not change token streams"
+    return {"reps": reps, "tpot_off_ms": off, "tpot_on_ms": on,
+            "overhead_frac": on / max(off, 1e-9) - 1.0}
 
 
 def main(argv=None) -> None:
@@ -135,6 +198,18 @@ def main(argv=None) -> None:
     ap.add_argument("--cache-pages", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome trace-event JSON "
+                         "(Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry snapshot JSON "
+                         "(schema codec-metrics/1, plus a 'passes' "
+                         "section with the per-pass summaries)")
+    ap.add_argument("--profile-every", type=int, default=0,
+                    help="sampled step profiling period (0 = off)")
+    ap.add_argument("--overhead-reps", type=int, default=3,
+                    help="reps per mode for the telemetry-overhead "
+                         "check (0 = skip)")
     args = ap.parse_args(argv)
     for k, v in PRESETS[args.preset].items():
         if getattr(args, k, None) is None:
@@ -145,10 +220,12 @@ def main(argv=None) -> None:
     rng = np.random.default_rng(args.seed)
     policy = CachePolicy(ttl_steps=args.cache_ttl,
                          max_pages=args.cache_pages)
+    telemetry = Telemetry(profile_every=args.profile_every)
     eng = DecodeEngine(cfg, params, page_size=args.page_size,
                        num_pages=args.num_pages, backend=args.backend,
                        max_q=max(8, args.requests), temperature=0.0,
-                       fused=args.fused, cache=policy)
+                       fused=args.fused, cache=policy,
+                       telemetry=telemetry)
 
     result = {"preset": args.preset, "arch": args.arch,
               "backend": args.backend, "arrivals": args.arrivals,
@@ -157,35 +234,54 @@ def main(argv=None) -> None:
                              doc_len=args.doc_len, num_docs=args.num_docs,
                              requests=args.requests, max_new=args.max_new,
                              rate=args.rate, seed=args.seed)}
+    cold_schedule = None
     for pass_no, name in enumerate(("cold", "warm")):
         prompts = build_mix(args, rng, pass_no)
         schedule = build_schedule(args, rng, prompts)
-        snap = dict(eng.cache.stats)
+        if pass_no == 0:
+            cold_schedule = schedule
+        prev = eng.publish_metrics().snapshot()
         t0 = time.perf_counter()
         recs = replay(eng, schedule, args.max_new)
         wall = time.perf_counter() - t0
-        summ = summarize(recs, args.max_new)
+        check_streams(recs, args.max_new)
+        d = metrics_mod.delta(eng.publish_metrics().snapshot(), prev)
+        summ = registry_summary(d, eng)
         summ["wall_s"] = wall
-        d = {k: eng.cache.stats[k] - snap[k] for k in snap}
-        summ["cache"] = {
-            "hits": d["hits"], "misses": d["misses"],
-            "hit_tokens": d["hit_tokens"],
-            "hit_rate": d["hits"] / max(d["hits"] + d["misses"], 1),
-            "evicted_nodes": d["evicted_nodes"],
-            "resident_pages": eng.cache.resident_pages(),
-        }
         result[name] = summ
         print(f"{name}: ttft p50 {summ['ttft_ms']['p50']:.1f} ms "
               f"p99 {summ['ttft_ms']['p99']:.1f} ms | "
               f"tpot p50 {summ['tpot_ms']['p50']:.1f} ms | "
               f"hit rate {summ['cache']['hit_rate']:.0%} "
-              f"({d['hit_tokens']} cached tokens)")
+              f"({summ['cache']['hit_tokens']} cached tokens)")
         for r in list(eng.requests):
             eng.release(r)
 
     result["ttft_p50_speedup"] = (result["cold"]["ttft_ms"]["p50"]
                                   / max(result["warm"]["ttft_ms"]["p50"],
                                         1e-9))
+    if args.overhead_reps > 0:
+        oh = measure_overhead(args, cfg, params, cold_schedule,
+                              args.overhead_reps)
+        result["telemetry_overhead"] = oh
+        print(f"telemetry overhead: tpot {oh['tpot_on_ms']:.2f} ms on / "
+              f"{oh['tpot_off_ms']:.2f} ms off "
+              f"({100 * oh['overhead_frac']:+.1f}%)")
+        if args.preset == "smoke":
+            limit = float(os.environ.get("BENCH_OVERHEAD_LIMIT", "0.03"))
+            assert oh["overhead_frac"] < limit, \
+                (f"telemetry overhead {oh['overhead_frac']:.1%} exceeds "
+                 f"{limit:.0%} budget")
+    if args.trace_out:
+        telemetry.export_trace(args.trace_out)
+        print(f"# wrote {args.trace_out}: "
+              f"{len(telemetry.trace_events())} trace events")
+    if args.metrics_out:
+        eng.export_metrics(args.metrics_out, extra={"passes": {
+            n: {k: result[n][k] for k in
+                ("ttft_ms", "tpot_ms", "cache", "requests", "tokens")}
+            for n in ("cold", "warm")}})
+        print(f"# wrote {args.metrics_out}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"# wrote {args.out}: warm/cold ttft p50 "

@@ -173,13 +173,14 @@ def make_sharded_step_fn(cfg: ModelConfig, backend,
                 # program altogether.
                 Bm = base.merge_gather.shape[0]
                 if D > 1 and Bm > 0:
-                    gi = base.merge_gather
-                    og, mg, lg = por_mod.por_subgroup_merge(
-                        o[gi], m[gi], l[gi], "data", D, base.contrib)
-                    si = base.merge_scatter
-                    o = o.at[si].set(og, mode="drop")
-                    m = m.at[si].set(mg, mode="drop")
-                    l = l.at[si].set(lg, mode="drop")
+                    with jax.named_scope("codec.por_merge"):
+                        gi = base.merge_gather
+                        og, mg, lg = por_mod.por_subgroup_merge(
+                            o[gi], m[gi], l[gi], "data", D, base.contrib)
+                        si = base.merge_scatter
+                        o = o.at[si].set(og, mode="drop")
+                        m = m.at[si].set(mg, mode="drop")
+                        l = l.at[si].set(lg, mode="drop")
                 o_flat = o.astype(q_loc.dtype).reshape(B, 1, hq_loc * hd)
                 if heads_sharded:
                     # TP epilogue: partial output projection, psum(model)
@@ -202,9 +203,10 @@ def make_sharded_step_fn(cfg: ModelConfig, backend,
         x, pool_k, pool_v, conv_all, ssm_all = T.scan_layer_stack(
             cfg, params, body,
             (x, state.pool_k, state.pool_v, state.conv, state.ssm))
-        logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
-        key, sk = jax.random.split(key)
-        toks = sampler.sample(logits, sk, temperature)
+        with jax.named_scope("codec.sample"):
+            logits = T._unembed(params, cfg, x)[:, 0]       # (B, V)
+            key, sk = jax.random.split(key)
+            toks = sampler.sample(logits, sk, temperature)
         return toks, key, StepState(pool_k, pool_v, conv_all, ssm_all)
 
     pool_spec = paged_pool_spec(mesh, hkv)

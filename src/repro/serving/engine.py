@@ -86,6 +86,7 @@ from ..models import mamba as M
 from ..models import transformer as T
 from . import faults as faults_mod
 from . import sampler, speculation as spec_mod, step_fn as step_fn_mod
+from . import telemetry as telemetry_mod
 from .cache import CachePolicy, PrefixCache
 from .faults import EngineInvariantError, InjectedFault, ResourceExhausted
 from .kv_cache import PagedKVPool
@@ -140,6 +141,10 @@ class Request:
     queue_deadline: Optional[float] = None  # absolute admission deadline
     finish_reason: Optional[str] = None
     notified: bool = False             # on_done already fired
+    # telemetry: engine-clock times a committed token value first/last
+    # became host-visible (None until the first materialisation)
+    first_tok_t: Optional[float] = None
+    last_tok_t: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -183,7 +188,8 @@ class DecodeEngine:
                  speculative=None, cache=None,
                  faults=None, nan_guard: bool = False,
                  check_every: int = 0, clock=None,
-                 max_dispatch_retries: int = 4):
+                 max_dispatch_retries: int = 4,
+                 telemetry=None):
         assert cfg.encoder_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -226,6 +232,17 @@ class DecodeEngine:
         # enforced against it at step boundaries, so tests and the chaos
         # harness drive it deterministically (e.g. one unit per step)
         self.clock = clock if clock is not None else time.monotonic
+        # ---- telemetry (serving/telemetry.py, DESIGN.md §13) ---------- #
+        # telemetry=True builds a default Telemetry; pass an instance to
+        # set profile_every / inject a TraceSink.  Span timestamps ride
+        # the engine clock above, so fake clocks give deterministic
+        # traces.  telemetry=None keeps every hook a no-op.
+        if telemetry is True:
+            telemetry = telemetry_mod.Telemetry()
+        self.telemetry: Optional[telemetry_mod.Telemetry] = \
+            telemetry or None
+        if self.telemetry is not None:
+            self.telemetry.bind_clock(self.clock)
         self.nan_guard = bool(nan_guard)
         if self.nan_guard and mesh is not None:
             raise ValueError(
@@ -298,6 +315,9 @@ class DecodeEngine:
             and mesh.shape["data"] > 1
         self.calibrate = bool(calibrate)
         self._epoch_features: Dict[str, float] = {}
+        # per-shard feature vectors of the current epoch (profiled
+        # sharded steps attach them for per-shard attribution)
+        self._epoch_shard_features: Dict[str, List[float]] = {}
         self.forest = tree_mod.PrefixForest(page_size)
         # splitting a pinned node must extend each waiting holder's pin
         # list over the new lower half (see _on_split_pins)
@@ -465,6 +485,11 @@ class DecodeEngine:
         if max_queue_s is not None:
             req.queue_deadline = now + float(max_queue_s)
         self.requests[rid] = req
+        if self.telemetry is not None:
+            self.telemetry.metrics["requests_submitted"].inc()
+            self.telemetry.begin("queued", track=rid,
+                                 args={"prompt_tokens": len(prompt),
+                                       "max_new": max_new})
         edf = [d for d in (req.deadline, req.queue_deadline)
                if d is not None]
         self.admission.push(rid, deadline=min(edf) if edf else None)
@@ -570,6 +595,12 @@ class DecodeEngine:
         req.state = PREFILL
         self._prefilling.append(req.rid)
         self.stats["admitted"] += 1
+        if self.telemetry is not None:
+            if req.preemptions == 0 and not req.generated:
+                self.telemetry.observe("queue_wait_s",
+                                       self.clock() - req.submit_t)
+            self.telemetry.end(track=req.rid)          # "queued"
+            self.telemetry.begin("prefill", track=req.rid)
 
     # ------------------------------------------------------------------ #
     # async-token sync (fused path)
@@ -586,6 +617,8 @@ class DecodeEngine:
         """
         if not self._deferred and not self._pending_ref:
             return
+        tm = self.telemetry
+        c0 = self.clock() if tm is not None else 0.0
         t0 = time.perf_counter()
         vals = {id(e): np.asarray(e.tokens) for e in self._deferred}
         # NaN guard: a dispatch whose row_ok flag is False produced
@@ -608,6 +641,7 @@ class DecodeEngine:
                     req = self.requests.get(rid)
                     if req is not None:   # sampled, never appended
                         poisoned[rid] = len(req.generated)
+        landed: Set[int] = set()
         for e in self._deferred:
             v = vals[id(e)]
             for rid, row, gen_idx, node_id, tok_idx in e.patches:
@@ -617,6 +651,7 @@ class DecodeEngine:
                 req = self.requests.get(rid)
                 if req is not None and gen_idx < len(req.generated):
                     req.generated[gen_idx] = tok
+                    landed.add(rid)
                 node = self.forest.nodes.get(node_id)
                 if (node is not None and node.tokens is not None
                         and tok_idx < len(node.tokens)):
@@ -631,7 +666,20 @@ class DecodeEngine:
         self._pending_ref = {}
         self._flushed_since_dispatch = True
         self.stats["token_flushes"] += 1
-        self.stats["decode_sync_time"] += time.perf_counter() - t0
+        elapsed = time.perf_counter() - t0
+        self.stats["decode_sync_time"] += elapsed
+        # the sync wait is attributed to the step in which the flush
+        # actually ran, under its OWN key — it must never pollute that
+        # step's dispatch/compute split (async flushing defers syncs to
+        # arbitrary later steps; see step_stats "flush_time")
+        self._decode_timing["flush_time"] = \
+            self._decode_timing.get("flush_time", 0.0) + elapsed
+        if tm is not None:
+            for rid in landed:
+                self._note_token(self.requests[rid])
+            tm.observe("flush_s", elapsed)
+            tm.complete("flush", c0, self.clock(),
+                        args={"tokens": len(landed)})
         for rid, cut in poisoned.items():
             req = self.requests.get(rid)
             if req is None:
@@ -734,6 +782,11 @@ class DecodeEngine:
         req.preemptions += 1
         self.admission.requeue(rid)
         self.stats["preempted"] += 1
+        if self.telemetry is not None:
+            self.telemetry.end_all(rid)       # prefill/decode span
+            self.telemetry.instant("evict", track=rid,
+                                   args={"pinned_nodes": len(pinned)})
+            self.telemetry.begin("queued", track=rid)
 
     def _reclaimable_pages(self, rid: int) -> int:
         """Pages that preempting ``rid`` would free (its non-shared nodes)."""
@@ -1095,10 +1148,22 @@ class DecodeEngine:
         costs.  Steps that hit a compile or an epoch replan are orders
         of magnitude above the steady state and would poison the
         regression, so samples beyond 5x the median step time are
-        rejected first.  Returns True when a fit was installed."""
-        samples = [{**s, "seconds": s["dispatch_time"]}
-                   for s in self.step_stats
-                   if s.get("hbm_bytes") and s.get("dispatch_time", 0) > 0]
+        rejected first.  Returns True when a fit was installed.
+
+        Sampled-profiling rows (``telemetry.profile_every``) carry a
+        blocked dispatch/compute split even when ``calibrate=`` is off;
+        when any exist they are PREFERRED over plain rows, whose
+        ``dispatch_time`` on the async fused path is only the submit
+        cost and would poison the fit."""
+        rows = [s for s in self.step_stats if s.get("hbm_bytes")]
+        profiled = [s for s in rows if s.get("profiled")]
+        pool = profiled or [s for s in rows
+                            if s.get("dispatch_time", 0) > 0]
+        samples = [{**s, "seconds": s["dispatch_time"]
+                    + (s.get("compute_time", 0.0)
+                       if s.get("profiled") else 0.0)}
+                   for s in pool if s.get("dispatch_time", 0) > 0
+                   or s.get("compute_time", 0) > 0]
         if samples:
             med = float(np.median([s["seconds"] for s in samples]))
             samples = [s for s in samples if s["seconds"] <= 5.0 * med]
@@ -1149,6 +1214,17 @@ class DecodeEngine:
         if req.rid in self._prefilling:
             self._prefilling.remove(req.rid)
         self._mamba_pos.pop(req.rid, None)
+        if self.telemetry is not None:
+            self.telemetry.end(track=req.rid)         # "prefill"
+            self.telemetry.begin("decode", track=req.rid)
+
+    def _note_token(self, req: Request) -> None:
+        """Telemetry bookkeeping: a committed token value for this
+        request just became host-visible (TTFT/TPOT attribution)."""
+        now = self.clock()
+        if req.first_tok_t is None:
+            req.first_tok_t = now
+        req.last_tok_t = now
 
     def _prefill_step(self, req: Request, budget: Optional[int]) -> int:
         """Advance the request's prefill by one chunk of ``<= budget``
@@ -1220,6 +1296,7 @@ class DecodeEngine:
         if not self._ensure_pages_upto(rid, end):
             self.stats["prefill_stalls"] += 1
             return 0
+        c0 = self.clock() if self.telemetry is not None else 0.0
 
         tokens = np.asarray(seq[span_start:end], np.int32)
         Tn = len(tokens)
@@ -1309,6 +1386,11 @@ class DecodeEngine:
         self.stats["recompute_tokens"] += max(
             0, min(end, req.computed_hwm) - span_start)
         req.computed_hwm = max(req.computed_hwm, end)
+        if self.telemetry is not None:
+            c1 = self.clock()
+            self.telemetry.complete("prefill_chunk", c0, c1, track=rid,
+                                    args={"tokens": Tn})
+            self.telemetry.observe("prefill_chunk_s", c1 - c0)
 
         if end < total:
             self.stats["prefill_chunks"] += 1
@@ -1385,6 +1467,7 @@ class DecodeEngine:
 
     def _rebuild_plans(self) -> None:
         t0 = time.perf_counter()
+        c0 = self.clock() if self.telemetry is not None else 0.0
         rows = self._active_rows()
         req_rows = {r: i for i, r in enumerate(rows)}
         ps = self.page_size
@@ -1408,6 +1491,11 @@ class DecodeEngine:
         self._steps_since_plan = 0
         self.stats["replans"] += 1
         self.stats["plan_time"] += time.perf_counter() - t0
+        if self.telemetry is not None:
+            c1 = self.clock()
+            self.telemetry.complete("plan_build", c0, c1,
+                                    args={"rows": len(rows)})
+            self.telemetry.observe("plan_build_s", c1 - c0)
 
     def _advance_qpos(self) -> None:
         """Cheap per-step plan refresh: live queries moved one position."""
@@ -1424,18 +1512,25 @@ class DecodeEngine:
         """One engine step: admission + chunked prefill, then append
         pending tokens (evicting under pressure) and decode one token per
         running request."""
+        tm = self.telemetry
         snap = {k: self.stats[k]
-                for k in ("admitted", "preempted", "reclaimed",
+                for k in ("steps", "admitted", "preempted", "reclaimed",
                           "prefill_tokens", "recompute_tokens",
                           "spec_proposed", "spec_accepted",
                           "cancelled", "timed_out", "failed",
                           "callback_errors", "faults_injected",
                           "dispatch_failures", "dispatch_recoveries")}
+        # per-step timing starts HERE: a flush triggered by deadline
+        # enforcement or between-step admission bills this step's
+        # flush_time, never the decode phase's dispatch/compute split
+        self._decode_timing = {}
+        if tm is not None:
+            c_step0 = self.clock()
+            tm.begin("step", args={"step": len(self.step_stats)})
         if self.injector is not None:
             self.injector.tick(len(self.step_stats))
         self._enforce_deadlines()
         self._admit_phase()
-        self._decode_timing = {}
         out = self._decode_with_recovery()
         if self.cache is not None:
             self.cache.tick()
@@ -1448,17 +1543,15 @@ class DecodeEngine:
             self.check()
         cache_stats = {}
         if self.cache is not None:
+            d = self._cache_step_delta()
             resident = self.cache.resident_pages()
             cache_stats = {
-                "cache_hits": self.cache.stats["hits"]
-                - self._cache_snap["hits"],
+                "cache_hits": d["hits"],
                 "cache_hit_rate": self.cache.hit_rate,
                 "cache_resident_pages": resident,
                 "cache_resident_bytes": resident * self.pool.page_bytes,
-                "cache_evicted_nodes": self.cache.stats["evicted_nodes"]
-                - self._cache_snap["evicted_nodes"],
+                "cache_evicted_nodes": d["evicted_nodes"],
             }
-            self._cache_snap = dict(self.cache.stats)
         self.step_stats.append({
             "step": len(self.step_stats),
             "decoded": len(out),
@@ -1486,7 +1579,84 @@ class DecodeEngine:
                          "dispatch_failures", "dispatch_recoveries")},
             **cache_stats,
         })
+        if tm is not None:
+            tm.metrics["engine_steps"].inc()
+            if self.mesh is not None and self._epoch_features \
+                    and self.stats["steps"] > snap["steps"]:
+                tm.metrics["merge_bytes"].inc(
+                    self._epoch_features["merge_bytes"])
+                tm.metrics["merge_rounds"].inc(
+                    self._epoch_features["merge_rounds"])
+            t = self._decode_timing
+            if "dispatch_time" in t:
+                tm.observe("dispatch_s", t["dispatch_time"])
+            if t.get("profiled"):
+                tm.observe("profile_dispatch_s", t["dispatch_time"])
+                tm.observe("profile_device_s", t.get("compute_time", 0.0))
+                tm.observe("profile_host_s", t.get("host_time", 0.0))
+            self._publish_telemetry()
+            c_step1 = self.clock()
+            tm.observe("step_s", c_step1 - c_step0)
+            tm.end(args={"decoded": len(out)})            # "step"
         return out
+
+    def _cache_step_delta(self) -> Dict[str, int]:
+        """Advance the rolling cache-stats snapshot and return the
+        delta since the previous step — read-and-update is ATOMIC here,
+        the single consumer, so lookups recorded by eager between-step
+        admissions land in exactly one step row no matter how often
+        external readers poll ``step_stats`` or the metrics registry
+        (those readers difference their own snapshots instead)."""
+        cur = dict(self.cache.stats)
+        prev = self._cache_snap
+        self._cache_snap = cur
+        return {k: cur[k] - prev.get(k, 0) for k in cur}
+
+    def _publish_telemetry(self) -> None:
+        """Fold cumulative engine/cache stats into the metrics registry
+        (monotone counter deltas) and refresh the gauges.  Runs every
+        step and before any metrics export."""
+        tm = self.telemetry
+        if tm is None:
+            return
+        tm.sync_counters("engine", self.stats,
+                         telemetry_mod.ENGINE_STAT_COUNTERS)
+        gauges = {
+            "pool_occupancy": self.pool.occupancy(),
+            "pool_free_pages": self.pool.num_free,
+            "backoff_pages": self._backoff_pages,
+            "running": len(self._active_rows()),
+            "waiting": len(self.admission),
+            "prefilling": len(self._prefilling),
+        }
+        if self.cache is not None:
+            tm.sync_counters("cache", self.cache.stats,
+                             telemetry_mod.CACHE_STAT_COUNTERS)
+            resident = self.cache.resident_pages()
+            gauges.update(cache_hit_rate=self.cache.hit_rate,
+                          cache_resident_pages=resident,
+                          cache_resident_bytes=resident
+                          * self.pool.page_bytes)
+        if self.fused:
+            gauges["compile_count"] = self.fused_cache_size
+        tm.set_gauges(gauges)
+
+    def publish_metrics(self):
+        """Public sync point for registry readers (benchmarks, serve):
+        returns the up-to-date :class:`~repro.core.metrics
+        .MetricsRegistry`, or None when telemetry is off."""
+        if self.telemetry is None:
+            return None
+        self._publish_telemetry()
+        return self.telemetry.metrics
+
+    def export_metrics(self, path: str, extra=None) -> None:
+        """Sync and write the schema-tagged metrics JSON."""
+        if self.telemetry is None:
+            raise RuntimeError(
+                "export_metrics needs DecodeEngine(telemetry=...)")
+        self._publish_telemetry()
+        self.telemetry.export_metrics(path, extra=extra)
 
     def _decode_with_recovery(self) -> Dict[int, Optional[int]]:
         """Dispatch the decode phase under the degradation ladder.
@@ -1586,6 +1756,8 @@ class DecodeEngine:
             else:
                 self.forest.append_token(r, req.pending)
                 req.generated.append(req.pending)
+                if self.telemetry is not None:
+                    self._note_token(req)
             req.pending = None
             try:
                 self._grow_leaf_tail(r)
@@ -1608,6 +1780,8 @@ class DecodeEngine:
         if not rows0:
             return {}
         t0 = time.perf_counter()
+        c0 = self.clock() if self.telemetry is not None else 0.0
+        flush_before = self._decode_timing.get("flush_time", 0.0)
         # 1. append pending tokens to leaves (may evict under pressure)
         self._append_pending(rows0)
         rows = self._active_rows()
@@ -1709,10 +1883,20 @@ class DecodeEngine:
             self.stats["nan_rows"] += 1
             self._fail_request(r, "nan_logits", flush=False)
         self.stats["steps"] += 1
-        self._decode_timing = {"dispatch_time": t1 - t0,
-                               "compute_time": t2 - t1}
-        self.stats["decode_dispatch_time"] += t1 - t0
+        # any flush that ran inside this phase (preempting appends) has
+        # billed flush_time already; keep it out of the dispatch split
+        flush_in = self._decode_timing.get("flush_time", 0.0) \
+            - flush_before
+        self._decode_timing.update(
+            dispatch_time=max(0.0, t1 - t0 - flush_in),
+            compute_time=t2 - t1)
+        self.stats["decode_dispatch_time"] += \
+            self._decode_timing["dispatch_time"]
         self.stats["decode_time"] += time.perf_counter() - t0
+        if self.telemetry is not None:
+            self.telemetry.complete("decode", c0, self.clock(),
+                                    args={"mode": "eager",
+                                          "rows": len(rows)})
         return out
 
     def _attend(self, qb, k_pool, v_pool, window, B,
@@ -1739,6 +1923,14 @@ class DecodeEngine:
         if not rows0:
             return {}
         t0 = time.perf_counter()
+        tm = self.telemetry
+        c0 = self.clock() if tm is not None else 0.0
+        flush_before = self._decode_timing.get("flush_time", 0.0)
+        # sampled profiling (telemetry.profile_every): this step blocks
+        # on the device to split dispatch/device/host phases; unsampled
+        # steps stay on the async fast path untouched
+        profiled = tm is not None \
+            and tm.should_profile(len(self.step_stats))
         # 1. append pending tokens (host ints after a sync / prefill,
         #    otherwise the in-flight device array via placeholders)
         self._append_pending(rows0)
@@ -1809,11 +2001,18 @@ class DecodeEngine:
             toks_dev, ok_dev, self.key, state = self._step_fn(
                 self.params, state, tok_in, self.key, self._fused_base,
                 np.int32(self._fused_delta), self._fused_prepared)
-        if self.calibrate and self.mesh is not None:
-            # calibration fits against TRUE step seconds, so the async
-            # dispatch must block here (costs the overlap; opt-in)
+        t_d1 = time.perf_counter()
+        calibrating = self.calibrate and self.mesh is not None
+        if calibrating or profiled:
+            # calibration/profiling fit against TRUE step seconds, so
+            # the async dispatch must block here (costs the overlap;
+            # opt-in — calibrate blocks every step, profile_every only
+            # the sampled ones)
             jax.block_until_ready(toks_dev)
-        dispatch = time.perf_counter() - t_d0
+        t_d2 = time.perf_counter()
+        # calibrate keeps its historical meaning: dispatch_time is the
+        # full blocked step.  Profiled steps split submit vs device.
+        dispatch = (t_d2 if calibrating else t_d1) - t_d0
         self.pool.k, self.pool.v = state.pool_k, state.pool_v
         self._mamba_carry = (state.conv, state.ssm)
         ent = _Deferred(toks_dev, list(rows),
@@ -1836,9 +2035,19 @@ class DecodeEngine:
         self.stats["steps"] += 1
         self.stats["fused_calls"] += 1
         self.stats["decode_dispatch_time"] += dispatch
-        self._decode_timing = {"dispatch_time": dispatch}
+        flush_in = self._decode_timing.get("flush_time", 0.0) \
+            - flush_before
+        self._decode_timing.update(dispatch_time=dispatch)
+        if profiled and not calibrating:
+            self._decode_timing.update(
+                compute_time=t_d2 - t_d1, profiled=True,
+                host_time=max(0.0, t_d0 - t0 - flush_in))
         if self.mesh is not None and self._epoch_features:
             self._decode_timing.update(self._epoch_features)
+            if profiled and self._epoch_shard_features:
+                # per-shard attribution of the sampled step (feeds
+                # CostModel.fit / imbalance analysis downstream)
+                self._decode_timing.update(self._epoch_shard_features)
         if done_any:
             # completion boundary: finished streams must be readable
             self.flush_tokens()
@@ -1846,6 +2055,10 @@ class DecodeEngine:
                 if self.requests[r].done:
                     out[r] = self.requests[r].generated[-1]
         self.stats["decode_time"] += time.perf_counter() - t0
+        if tm is not None:
+            tm.complete("decode", c0, self.clock(),
+                        args={"mode": "fused", "rows": len(rows),
+                              "profiled": bool(profiled)})
         return out
 
     def _fused_epoch(self, rows: List[int]) -> None:
@@ -1853,6 +2066,7 @@ class DecodeEngine:
         self.flush_tokens()
         self._sync_mamba_state()
         t0 = time.perf_counter()
+        c0 = self.clock() if self.telemetry is not None else 0.0
         B = len(rows)
         bucket = plan_mod.bucket_pow2(B)
         req_rows = {r: i for i, r in enumerate(rows)}
@@ -1907,6 +2121,12 @@ class DecodeEngine:
         self._steps_since_plan = 0
         self.stats["replans"] += 1
         self.stats["plan_time"] += time.perf_counter() - t0
+        if self.telemetry is not None:
+            c1 = self.clock()
+            self.telemetry.complete("plan_build", c0, c1,
+                                    args={"rows": len(rows),
+                                          "bucket": self._fused_bucket})
+            self.telemetry.observe("plan_build_s", c1 - c0)
 
     def _sharded_epoch(self, rows: List[int], bucket: int,
                        req_rows: Dict[int, int],
@@ -2035,6 +2255,8 @@ class DecodeEngine:
                      else 0)
                 n_attn_w[w] += 1
         hbm = steps = 0.0
+        shard_hbm: List[float] = []
+        shard_steps: List[float] = []
         for w, sp in self._sharded_plans.items():
             per_shard = [sum(self.cost_model.hbm_bytes(s.n_q, s.n)
                              for s in p.subtasks) for p in sp.shards]
@@ -2042,6 +2264,12 @@ class DecodeEngine:
                          for p in sp.shards]
             if not per_shard:
                 continue
+            if not shard_hbm:
+                shard_hbm = [0.0] * len(per_shard)
+                shard_steps = [0.0] * len(per_steps)
+            for i, (b, g) in enumerate(zip(per_shard, per_steps)):
+                shard_hbm[i] += n_attn_w[w] * b / lanes
+                shard_steps[i] += n_attn_w[w] * g / lanes
             k = int(np.argmax(per_shard))
             hbm += n_attn_w[w] * per_shard[k] / lanes
             steps += n_attn_w[w] * per_steps[k] / lanes
@@ -2056,6 +2284,12 @@ class DecodeEngine:
             "merge_bytes": n_attn * rounds * wire,
             "merge_rounds": n_attn * rounds,
         }
+        # per-shard vectors kept separately: attached to profiled rows
+        # only (they would bloat every ordinary step row)
+        self._epoch_shard_features = {
+            "shard_hbm_bytes": shard_hbm,
+            "shard_grid_steps": shard_steps,
+        } if shard_hbm else {}
 
     def predicted_step_seconds(self, hw=None) -> float:
         """Model-predicted per-step attention + merge seconds for the
@@ -2218,11 +2452,18 @@ class DecodeEngine:
         if not rows0:
             return {}
         t0 = time.perf_counter()
+        tm = self.telemetry
         self._append_pending(rows0)        # host ints: spec never defers
         rows = self._active_rows()
         if not rows:
             return {}
+        c0 = self.clock() if tm is not None else 0.0
         self._grow_drafts(rows)
+        if tm is not None:
+            tm.complete("spec_propose", c0, self.clock(),
+                        args={"rows": len(rows),
+                              "drafts": sum(len(st.nodes) for st in
+                                            self._drafts.values())})
         # injected NaN: poison a committed KV slot of the target's leaf
         # (as in the fused path) so every verify row of that request —
         # base query and draft heads — reads it through the verify plan
@@ -2257,6 +2498,7 @@ class DecodeEngine:
         self.stats["replans"] += 1
         self.stats["plan_time"] += time.perf_counter() - tp0
         t_d0 = time.perf_counter()
+        c_v0 = self.clock() if tm is not None else 0.0
         if self._spec_step_fn is not None:
             toks, ok = self._spec_verify_fused(tokens, q_pos, w_page,
                                                w_off, plans)
@@ -2264,6 +2506,9 @@ class DecodeEngine:
             toks, ok = self._spec_verify_eager(tokens, q_pos, w_page,
                                                w_off, plans)
         t_d1 = time.perf_counter()
+        if tm is not None:
+            tm.complete("spec_verify", c_v0, self.clock(),
+                        args={"queries": len(tokens)})
         if self.nan_guard:
             # quarantine before commit: a poisoned request's drafts roll
             # back with it and nothing enters its committed stream
@@ -2271,13 +2516,19 @@ class DecodeEngine:
                 if not bool(ok[req_rows[r]]):
                     self.stats["nan_rows"] += 1
                     self._fail_request(r, "nan_logits", flush=False)
+        c_a0 = self.clock() if tm is not None else 0.0
         out = self._spec_commit(rows, toks, head_rows)
         self.stats["steps"] += 1
         self.stats["spec_steps"] += 1
-        self._decode_timing = {"dispatch_time": t_d1 - t_d0,
-                               "compute_time": time.perf_counter() - t_d1}
+        self._decode_timing.update(
+            dispatch_time=t_d1 - t_d0,
+            compute_time=time.perf_counter() - t_d1)
         self.stats["decode_dispatch_time"] += t_d1 - t_d0
         self.stats["decode_time"] += time.perf_counter() - t0
+        if tm is not None:
+            tm.complete("spec_accept", c_a0, self.clock(),
+                        args={"accepted": sum(
+                            1 for v in out.values() if v is not None)})
         return out
 
     def _spec_verify_eager(self, tokens, q_pos, w_page, w_off,
@@ -2395,6 +2646,8 @@ class DecodeEngine:
                 src_p, src_o, dst_p, dst_o = map(np.asarray, zip(*copies))
                 self.pool.copy_slots(src_p, src_o, dst_p, dst_o)
                 self.stats["spec_accepted"] += len(copies)
+                if self.telemetry is not None:
+                    self._note_token(req)
             req.computed_hwm = max(req.computed_hwm,
                                    self.forest.context_len(r))
             if len(req.generated) >= req.max_new:
@@ -2407,11 +2660,14 @@ class DecodeEngine:
         return out
 
     # ------------------------------------------------------------------ #
-    def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
+    def run(self, max_steps: int = 64,
+            on_step=None) -> Dict[int, List[int]]:
         for _ in range(max_steps):
             if not self.has_work():
                 break
             self.step()
+            if on_step is not None:
+                on_step(self)
         self.flush_tokens()
         self._stream_ready()
         self._notify_done()
@@ -2510,6 +2766,24 @@ class DecodeEngine:
             return
         req.notified = True
         self.admission.remove(req.rid)   # drop EDF deadline bookkeeping
+        tm = self.telemetry
+        if tm is not None:
+            reason = req.finish_reason or "done"
+            tm.end_all(req.rid)
+            tm.instant(reason, track=req.rid,
+                       args={"tokens": len(req.generated)})
+            tm.metrics.counter("tokens_generated").inc(len(req.generated))
+            if reason == "done":
+                tm.metrics.counter("requests_done").inc()
+            if req.first_tok_t is not None:
+                tm.observe("ttft_s", req.first_tok_t - req.submit_t)
+                tm.observe("e2e_s",
+                           (req.last_tok_t or req.first_tok_t)
+                           - req.submit_t)
+                if req.last_tok_t is not None and len(req.generated) > 1:
+                    tm.observe("tpot_s",
+                               (req.last_tok_t - req.first_tok_t)
+                               / (len(req.generated) - 1))
         try:
             if self.injector is not None and req.on_done is not None:
                 spec = self.injector.take("callback", rid=req.rid)

@@ -151,9 +151,10 @@ def make_spec_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...]):
 
         x, pool_k, pool_v = T.scan_layer_stack(
             cfg, params, body, (x, state.pool_k, state.pool_v))
-        logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
-        toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        ok = jnp.isfinite(logits).all(-1)                   # (B,) NaN guard
+        with jax.named_scope("codec.spec_verify"):
+            logits = T._unembed(params, cfg, x)[:, 0]       # (B, V)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+            ok = jnp.isfinite(logits).all(-1)               # (B,) NaN guard
         return toks, ok, SpecState(pool_k, pool_v)
 
     return jax.jit(step, donate_argnums=(1,))
@@ -190,8 +191,11 @@ def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
         dlt = jnp.asarray(delta, jnp.int32) * base.row_valid.astype(jnp.int32)
         q_pos = base.q_pos0 + dlt
         tail_off = base.tail_off0 + dlt
-        advanced = tuple(backend.advance_fn(p, delta) for p in prepared)
-        x = T._embed(params, cfg, tokens[:, None], q_pos[:, None])  # (B,1,d)
+        with jax.named_scope("codec.plan_advance"):
+            advanced = tuple(backend.advance_fn(p, delta) for p in prepared)
+        with jax.named_scope("codec.embed"):
+            x = T._embed(params, cfg, tokens[:, None],
+                         q_pos[:, None])                    # (B,1,d)
 
         def body(c, kind, p, la, lm):
             x, pool_k, pool_v, conv_all, ssm_all = c
@@ -230,10 +234,11 @@ def make_step_fn(cfg: ModelConfig, backend, windows: Tuple[int, ...],
         x, pool_k, pool_v, conv_all, ssm_all = T.scan_layer_stack(
             cfg, params, body,
             (x, state.pool_k, state.pool_v, state.conv, state.ssm))
-        logits = T._unembed(params, cfg, x)[:, 0]           # (B, V)
-        key, sk = jax.random.split(key)
-        toks = sampler.sample(logits, sk, temperature)
-        ok = jnp.isfinite(logits).all(-1)                   # (B,) NaN guard
+        with jax.named_scope("codec.sample"):
+            logits = T._unembed(params, cfg, x)[:, 0]       # (B, V)
+            key, sk = jax.random.split(key)
+            toks = sampler.sample(logits, sk, temperature)
+            ok = jnp.isfinite(logits).all(-1)               # (B,) NaN guard
         return toks, ok, key, StepState(pool_k, pool_v, conv_all, ssm_all)
 
     return jax.jit(step, donate_argnums=(1,))

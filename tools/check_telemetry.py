@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Validate exported telemetry artifacts (docs/OBSERVABILITY.md).
+
+Two sub-checks, either or both:
+
+    python tools/check_telemetry.py --trace trace.json
+    python tools/check_telemetry.py --metrics metrics.json
+
+Trace check — the file must be a Chrome trace-event JSON object with a
+``traceEvents`` list that Perfetto can load:
+
+* every event carries ``name``/``ph``/``pid``/``tid``; ``X`` (complete)
+  events also ``ts``/``dur`` with non-negative numbers;
+* per ``(pid, tid)`` track, complete events are properly nested: spans
+  either contain one another or are disjoint — a pair that partially
+  overlaps would render garbage and means a begin/end pairing bug;
+* request tracks (pid 2) each close with a terminal instant event.
+
+Metrics check — the file must carry ``schema == "codec-metrics/1"`` and
+a ``metrics`` mapping where every entry is a well-formed counter
+(non-negative value), gauge, or histogram (bucket counts sum to
+``count``, one overflow bucket, non-negative tallies).
+
+Exits non-zero with a per-violation listing, so CI can gate on it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "codec-metrics/1"
+
+
+def check_trace(path: str) -> list:
+    errors = []
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents list"]
+    tracks: dict = {}
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                errors.append(f"event {i}: missing {k!r}: {ev}")
+        ph = ev.get("ph")
+        if ph == "X":
+            ts, dur = ev.get("ts"), ev.get("dur")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                errors.append(f"event {i} ({ev.get('name')}): bad ts {ts}")
+            elif not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event {i} ({ev.get('name')}): bad dur {dur}")
+            else:
+                tracks.setdefault((ev["pid"], ev["tid"]), []).append(
+                    (ts, ts + dur, ev.get("name")))
+        elif ph not in ("i", "I", "M", "B", "E"):
+            errors.append(f"event {i}: unknown phase {ph!r}")
+    for (pid, tid), spans in tracks.items():
+        spans.sort()
+        for (s0, e0, n0), (s1, e1, n1) in zip(spans, spans[1:]):
+            # sorted by start: the later span must nest inside or start
+            # after the earlier one — a straddling end is a pairing bug
+            if s1 < e0 < e1:
+                errors.append(
+                    f"track pid={pid} tid={tid}: {n1!r} [{s1},{e1}] "
+                    f"partially overlaps {n0!r} [{s0},{e0}]")
+    req_tracks = {ev["tid"] for ev in events
+                  if ev.get("pid") == 2 and ev.get("ph") == "X"}
+    closed = {ev["tid"] for ev in events
+              if ev.get("pid") == 2 and ev.get("ph") in ("i", "I")}
+    for tid in sorted(req_tracks - closed):
+        errors.append(f"request track tid={tid} has spans but never "
+                      f"reached a terminal instant")
+    if not errors:
+        n_x = sum(len(s) for s in tracks.values())
+        print(f"{path}: ok — {len(events)} events, {n_x} spans over "
+              f"{len(tracks)} tracks, {len(req_tracks)} request tracks")
+    return errors
+
+
+def check_metrics(path: str) -> list:
+    errors = []
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        return errors + [f"{path}: no metrics mapping"]
+    for name, m in metrics.items():
+        t = m.get("type")
+        if t == "counter":
+            if not isinstance(m.get("value"), (int, float)) \
+                    or m["value"] < 0:
+                errors.append(f"{name}: counter value {m.get('value')!r}")
+        elif t == "gauge":
+            if not isinstance(m.get("value"), (int, float)):
+                errors.append(f"{name}: gauge value {m.get('value')!r}")
+        elif t == "histogram":
+            bounds, counts = m.get("bounds"), m.get("counts")
+            if not isinstance(bounds, list) or not isinstance(counts, list) \
+                    or len(counts) != len(bounds) + 1:
+                errors.append(f"{name}: bounds/counts shape mismatch")
+            elif any(c < 0 for c in counts) or sum(counts) != m.get("count"):
+                errors.append(f"{name}: bucket counts do not sum to "
+                              f"count={m.get('count')}")
+            elif list(bounds) != sorted(bounds):
+                errors.append(f"{name}: bounds not sorted")
+        else:
+            errors.append(f"{name}: unknown metric type {t!r}")
+    if not errors:
+        kinds = [m.get("type") for m in metrics.values()]
+        print(f"{path}: ok — {len(metrics)} metrics "
+              f"({kinds.count('counter')} counters, "
+              f"{kinds.count('gauge')} gauges, "
+              f"{kinds.count('histogram')} histograms)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="codec-metrics/1 JSON to validate")
+    args = ap.parse_args()
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    errors = []
+    if args.trace:
+        errors += check_trace(args.trace)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
