@@ -10,7 +10,11 @@ Two passes run through the SAME engine: the cold pass starts from an
 empty cache, the warm pass re-uses the documents the cold pass left
 resident (new per-request tails, so only the shared prefixes can hit).
 ``BENCH_serve.json`` records p50/p99 TTFT and TPOT for both passes plus
-the warm-pass cache counters, giving CI a cold-vs-warm baseline.
+the warm-pass cache counters, giving CI a cold-vs-warm baseline.  A
+third scenario (``burst``) replays a cold shared-prompt burst — N
+requests over one uncached doc at step 0 — with cascade prefill
+(DESIGN.md §14) on vs off and records both TTFT distributions; on the
+smoke preset CI asserts cascade is no worse than sequential.
 
 All reported numbers come from the engine's metrics registry
 (docs/OBSERVABILITY.md): each pass snapshots the registry and takes a
@@ -183,6 +187,72 @@ def measure_overhead(args, cfg, params, schedule, reps):
             "overhead_frac": on / max(off, 1e-9) - 1.0}
 
 
+def measure_burst(args, cfg, params, reps):
+    """Cold shared-prompt burst: cascade vs sequential prefill TTFT.
+
+    N requests over ONE uncached shared doc arrive at step 0 behind a
+    decoy head whose private prompt absorbs the first chunk budgets —
+    so the doc is still cold when the burst's head admits and (with
+    ``cascade=True``) pulls its partners out of the wait queue.  Fresh
+    engine per rep and mode (no cross-request cache: the point is the
+    *uncached* path), chunked prefill at one page per chunk, min-of-reps
+    per mode.  Streams must be byte-identical across modes, and the
+    cascade pass must charge the shared span ~once (prefill-token
+    counters from the metrics registry), not once per request.
+    """
+    n = args.burst_requests
+    doc = np.random.default_rng(2000).integers(
+        0, 251, size=args.doc_len).tolist()
+    decoy = np.random.default_rng(2001).integers(
+        0, 251, size=args.doc_len).tolist() + [251, 252]
+    prompts = [decoy] + [doc + [1 + 5 * i + j for j in range(3)]
+                         for i in range(n)]
+    schedule = [(0, p) for p in prompts]
+    unique_tokens = sum(len(p) for p in (decoy, doc)) + 3 * n
+
+    def one(cascade):
+        best, streams, counters = None, None, None
+        for _ in range(reps):
+            eng = DecodeEngine(
+                cfg, params, page_size=args.page_size,
+                num_pages=args.num_pages, backend=args.backend,
+                max_q=max(8, n + 1), temperature=0.0, fused=args.fused,
+                prefill_chunk=args.page_size, cascade=cascade,
+                telemetry=Telemetry())
+            recs = replay(eng, schedule, args.max_new)
+            check_streams(recs, args.max_new)
+            # TTFT over the burst members (the decoy is scaffolding)
+            ttfts = [1e3 * (r["first"] - r["submit"]) for r in recs[1:]]
+            cur = {"p50": float(np.percentile(ttfts, 50)),
+                   "p99": float(np.percentile(ttfts, 99))}
+            if best is None or cur["p50"] < best["p50"]:
+                best = cur
+            streams = [r["toks"] for r in recs]
+            snap = eng.publish_metrics().snapshot()
+            counters = {k: int(snap[k]["value"]) for k in
+                        ("prefill_tokens", "cascade_groups",
+                         "cascade_shared_tokens", "cascade_batches")}
+        return best, streams, counters
+
+    seq, streams_seq, _ = one(False)   # first: warms shared jit shapes
+    cas, streams_cas, counters = one(True)
+    assert streams_cas == streams_seq, \
+        "cascade prefill must not change token streams"
+    # shared span charged ~once: a cascaded cold burst prefills about
+    # the unique token count, never N x the shared doc (slack: one
+    # final-logit recompute per member + one chunk of group ramp-up)
+    assert counters["cascade_shared_tokens"] > 0, counters
+    assert counters["prefill_tokens"] <= \
+        unique_tokens + n + args.page_size, counters
+    return {
+        "requests": n, "doc_len": args.doc_len,
+        "unique_tokens": unique_tokens, "reps": reps,
+        "ttft_ms": {"sequential": seq, "cascade": cas},
+        "cascade_counters": counters,
+        "ttft_p50_speedup": seq["p50"] / max(cas["p50"], 1e-9),
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--preset", choices=sorted(PRESETS), default="smoke")
@@ -210,6 +280,11 @@ def main(argv=None) -> None:
     ap.add_argument("--overhead-reps", type=int, default=3,
                     help="reps per mode for the telemetry-overhead "
                          "check (0 = skip)")
+    ap.add_argument("--burst-reps", type=int, default=3,
+                    help="reps per mode for the cold shared-prompt "
+                         "burst (cascade vs sequential; 0 = skip)")
+    ap.add_argument("--burst-requests", type=int, default=4,
+                    help="burst members sharing the cold doc")
     args = ap.parse_args(argv)
     for k, v in PRESETS[args.preset].items():
         if getattr(args, k, None) is None:
@@ -272,6 +347,22 @@ def main(argv=None) -> None:
             assert oh["overhead_frac"] < limit, \
                 (f"telemetry overhead {oh['overhead_frac']:.1%} exceeds "
                  f"{limit:.0%} budget")
+    if args.burst_reps > 0:
+        bw = measure_burst(args, cfg, params, args.burst_reps)
+        result["burst"] = bw
+        print(f"burst: cascade ttft p50 "
+              f"{bw['ttft_ms']['cascade']['p50']:.1f} ms vs sequential "
+              f"{bw['ttft_ms']['sequential']['p50']:.1f} ms "
+              f"({bw['ttft_p50_speedup']:.2f}x, "
+              f"{bw['cascade_counters']['cascade_shared_tokens']} shared "
+              f"tokens reused)")
+        if args.preset == "smoke":
+            limit = float(os.environ.get("BENCH_BURST_LIMIT", "1.05"))
+            p50c = bw["ttft_ms"]["cascade"]["p50"]
+            p50s = bw["ttft_ms"]["sequential"]["p50"]
+            assert p50c <= limit * p50s, \
+                (f"cascade burst TTFT p50 {p50c:.1f} ms worse than "
+                 f"sequential {p50s:.1f} ms (limit {limit:.2f}x)")
     if args.trace_out:
         telemetry.export_trace(args.trace_out)
         print(f"# wrote {args.trace_out}: "

@@ -57,6 +57,11 @@ def main() -> int:
                          "for decode growth of the running batch")
     ap.add_argument("--max-running", type=int, default=None,
                     help="cap on concurrently admitted requests")
+    ap.add_argument("--cascade", action="store_true",
+                    help="cascade prefill (DESIGN.md §14): co-admit "
+                         "waiting requests sharing forest paths, compute "
+                         "shared uncached spans once per group and batch "
+                         "the per-request suffix chunks into one dispatch")
     ap.add_argument("--fused", action="store_true",
                     help="fused single-dispatch decode step with async "
                          "dispatch (serving/step_fn.py); falls back to "
@@ -206,6 +211,7 @@ def main() -> int:
                            prefill_chunk=args.prefill_chunk,
                            reserve_pages=args.reserve_pages,
                            max_running=args.max_running,
+                           cascade=args.cascade,
                            fused=args.fused, mesh=mesh,
                            seq_split_pages=args.seq_split_pages,
                            replicate=args.replicate,

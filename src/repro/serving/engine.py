@@ -182,6 +182,8 @@ class DecodeEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk=None, reserve_pages: int = 0,
                  max_running: Optional[int] = None,
+                 cascade: bool = False,
+                 max_cascade_group: int = 8,
                  fused: bool = False,
                  mesh=None, seq_split_pages: int = 0,
                  replicate: bool = False, calibrate: bool = False,
@@ -344,6 +346,7 @@ class DecodeEngine:
         self.policy = AdmissionPolicy(
             prefill_chunk=prefill_chunk, reserve_pages=reserve_pages,
             max_running=max_running,
+            cascade=bool(cascade), max_cascade_group=max_cascade_group,
             draft_reserve_pages=self.spec.max_nodes if self.spec else 0)
         self.admission = AdmissionController(self.policy, self.cost_model,
                                              page_size)
@@ -373,7 +376,9 @@ class DecodeEngine:
                       "cancelled": 0, "timed_out": 0, "failed": 0,
                       "callback_errors": 0, "faults_injected": 0,
                       "dispatch_failures": 0, "dispatch_recoveries": 0,
-                      "nan_rows": 0, "invariant_checks": 0}
+                      "nan_rows": 0, "invariant_checks": 0,
+                      "cascade_groups": 0, "cascade_shared_tokens": 0,
+                      "cascade_suffix_tokens": 0, "cascade_batches": 0}
         self.step_stats: List[Dict] = []
         self._decode_timing: Dict[str, float] = {}
 
@@ -528,21 +533,18 @@ class DecodeEngine:
 
         Continues admitted prefills first, then admits waiting requests
         FCFS within the page watermark (reclaiming finished-request KV if
-        needed) and the per-step cost-model prefill budget.
+        needed) and the per-step cost-model prefill budget.  With
+        ``cascade=True`` prefilling requests that share an unfilled
+        forest node advance as one cascade group — the shared span is
+        computed once, the suffix chunks batch into one dispatch — and
+        admitting a head-of-line request pulls its cascade partners out
+        of the wait queue so the group prefills together (DESIGN.md §14).
         """
         running_ctx = [self.forest.context_len(r)
                        for r in self._active_rows()]
         budget = self.admission.prefill_budget(running_ctx)
-        spent = 0
         # 1. advance chunked prefills already admitted
-        for rid in list(self._prefilling):
-            if budget is not None and spent >= budget:
-                return
-            req = self.requests[rid]
-            if req.state != PREFILL:       # preempted by an earlier prefill
-                continue
-            spent += self._prefill_step(
-                req, None if budget is None else budget - spent)
+        spent = self._advance_prefills(budget)
         # 2. admit from the queue (FCFS; head-of-line blocks)
         while len(self.admission):
             if budget is not None and spent >= budget:
@@ -569,8 +571,371 @@ class DecodeEngine:
             self.flush_tokens()
             self.admission.pop()
             self._admit(head)
-            spent += self._prefill_step(
-                head, None if budget is None else budget - spent)
+            group = [head.rid]
+            if self.policy.cascade:
+                group += self._co_admit_partners(head)
+            spent += self._prefill_group(
+                group, None if budget is None else budget - spent)
+
+    def _advance_prefills(self, budget: Optional[int]) -> int:
+        """Advance every admitted-but-unfinished prefill by one chunk."""
+        spent = 0
+        if not self.policy.cascade:
+            for rid in list(self._prefilling):
+                if budget is not None and spent >= budget:
+                    return spent
+                req = self.requests[rid]
+                if req.state != PREFILL:   # preempted by an earlier prefill
+                    continue
+                spent += self._prefill_step(
+                    req, None if budget is None else budget - spent)
+            return spent
+        # cascade mode: regroup every step — membership is derived from
+        # the forest (first unfilled node on each path), so preemption,
+        # node splits and members completing at different times all fall
+        # out of the grouping instead of needing group-object surgery
+        for group in self._prefill_groups():
+            if budget is not None and spent >= budget:
+                return spent
+            spent += self._prefill_group(
+                group, None if budget is None else budget - spent)
+        return spent
+
+    def _co_admit_partners(self, head: Request) -> List[int]:
+        """Pull the head's cascade partners out of the wait queue.
+
+        A partner is a waiting request whose prompt's deepest shared
+        forest node (``tree.match_path``) lies on the head's freshly
+        inserted path: prefilling it now means the shared span is
+        computed once for the whole group instead of once per request.
+        Co-admission is opportunistic — the page probe and the
+        ``max_running`` cap still apply, and a partner failing either
+        simply keeps its place in the queue.
+        """
+        anchor = {n.id for n in self.forest.path(head.rid) if n.length}
+        if not anchor:
+            return []
+        ps = self.page_size
+
+        def key_of(rid: int) -> Optional[int]:
+            nid, matched = self.forest.match_path(
+                np.asarray(self.requests[rid].seq, np.int32))
+            # < one page shared: insertion would not even split a node,
+            # so there is no shared span to cascade over
+            return nid if matched >= ps else None
+
+        admitted: List[int] = []
+        limit = self.policy.max_cascade_group - 1
+        for rid in self.admission.cascade_partners(anchor, key_of, limit):
+            if (self.policy.max_running is not None
+                    and len(self._live()) >= self.policy.max_running):
+                break
+            part = self.requests[rid]
+            if not self._has_pages_for(part):
+                continue
+            self.admission.remove(rid)
+            self._admit(part)
+            admitted.append(rid)
+        return admitted
+
+    def _cascade_key(self, rid: int) -> Optional[int]:
+        """Id of the first not-fully-filled node on the request's path.
+
+        Prefilling requests that map to the same key are about to compute
+        the same node's KV — they form one cascade group and share that
+        span's forward pass (``None`` = nothing left to fill).
+        """
+        for node in self.forest.path(rid):
+            if node.length == 0:
+                continue
+            if min(node.meta.get("filled", 0), node.length) < node.length:
+                return node.id
+        return None
+
+    def _prefill_groups(self) -> List[List[int]]:
+        """Partition ``_prefilling`` into cascade groups (order kept)."""
+        groups: List[List[int]] = []
+        by_key: Dict[int, int] = {}
+        for rid in list(self._prefilling):
+            if self.requests[rid].state != PREFILL:
+                continue
+            key = self._cascade_key(rid)
+            if key is not None and key in by_key:
+                groups[by_key[key]].append(rid)
+            else:
+                if key is not None:
+                    by_key[key] = len(groups)
+                groups.append([rid])
+        return groups
+
+    def _prefill_group(self, group: List[int],
+                       budget: Optional[int]) -> int:
+        group = [r for r in group if self.requests[r].state == PREFILL]
+        if not group:
+            return 0
+        if len(group) == 1:
+            return self._prefill_step(self.requests[group[0]], budget)
+        return self._cascade_prefill_step(group, budget)
+
+    def _filled_front(self, rid: int) -> int:
+        """Contiguous filled-KV front along the request's path."""
+        filled = 0
+        for node in self.forest.path(rid):
+            f = min(node.meta.get("filled", 0), node.length)
+            filled += f
+            if f < node.length:
+                break
+        return filled
+
+    def _shared_frontier(self, group: List[int]) -> int:
+        """Absolute end position of the deepest node common to every
+        member's path — the span whose compute the group shares."""
+        paths = [self.forest.path(r) for r in group]
+        end = 0
+        for nodes in zip(*paths):
+            nid = nodes[0].id
+            if any(n.id != nid for n in nodes[1:]):
+                break
+            end = nodes[0].end_pos
+        return end
+
+    def _cascade_prefill_step(self, group: List[int],
+                              budget: Optional[int]) -> int:
+        """Advance a cascade group by one chunk (DESIGN.md §14).
+
+        Phase A computes the group's shared uncached span exactly once:
+        one forward over the common path (through the lead member), KV
+        written into the shared nodes' pages and SSM boundary states
+        cached in ``node.meta["ssm"]`` exactly as the sequential path
+        does — then hands every sibling the carried mid-node SSM state so
+        all of them resume identically from the chunk boundary.  Phase B
+        batches the per-request suffix chunks into one padded dispatch;
+        recurrent (Mamba) suffixes fall back to the per-request path
+        (the shared phase still cascades), and members whose next
+        unfilled node is shared with another member recurse as a deeper
+        cascade subgroup.  A member stalling on pages is skipped while
+        its siblings proceed; a stall on the *shared* span stalls the
+        group (the span is on every member's path).
+        """
+        tm = self.telemetry
+        spent = 0
+        alive = [r for r in group if self.requests[r].state == PREFILL]
+        if len(alive) < 2:
+            return self._prefill_group(alive, budget)
+        self.stats["cascade_groups"] += 1
+
+        # ---- phase A: shared uncached span, computed once ------------- #
+        lead = self.requests[alive[0]]
+        frontier = self._shared_frontier(alive)
+        if self._filled_front(lead.rid) < frontier:
+            c0 = self.clock() if tm is not None else 0.0
+            n = self._prefill_step(lead, budget, stop_at=frontier)
+            spent += n
+            if n:
+                self.stats["cascade_shared_tokens"] += n * (len(alive) - 1)
+                if tm is not None:
+                    c1 = self.clock()
+                    for rid in alive[1:]:
+                        # the shared chunk belongs to every member's
+                        # prefill span, not just the lead's (§13 nesting)
+                        tm.complete("prefill_chunk", c0, c1, track=rid,
+                                    args={"tokens": n, "shared": True})
+            # hand each sibling the carried mid-node SSM state so hybrid
+            # archs resume from the cascaded chunk boundary instead of
+            # recomputing from the last node-aligned ``meta["ssm"]``
+            pos = self._mamba_pos.get(lead.rid)
+            if pos is not None and pos <= frontier:
+                for rid in alive[1:]:
+                    self._mamba_pos[rid] = pos
+                    for st in self.mamba_state.values():
+                        if lead.rid in st:
+                            st[rid] = st[lead.rid]
+            if n == 0:
+                self.stats["prefill_stalls"] += len(alive) - 1
+                return spent       # shared-span page stall: group waits
+            if budget is not None and spent >= budget:
+                return spent
+            if self._filled_front(lead.rid) < frontier:
+                return spent       # chunk ended mid-shared-span
+
+        # ---- phase B: per-request suffix chunks, one dispatch --------- #
+        alive = [r for r in alive if self.requests[r].state == PREFILL]
+        has_mamba = any(k.mixer == "mamba" for k, _ in self.layers)
+        by_key: Dict[int, List[int]] = {}
+        for rid in alive:
+            key = self._cascade_key(rid)
+            by_key.setdefault(key if key is not None else ~rid,
+                              []).append(rid)
+        batch: List[Tuple[Request, int, int]] = []
+        for key, rids in by_key.items():
+            if budget is not None and spent >= budget:
+                break
+            left = None if budget is None else budget - spent
+            if len(rids) > 1:
+                # a deeper node shared by a strict subset of the group:
+                # cascade it as its own subgroup (phase A recursion)
+                spent += self._cascade_prefill_step(rids, left)
+                continue
+            req = self.requests[rids[0]]
+            total = len(req.seq)
+            start = self._filled_front(req.rid)
+            if has_mamba or start >= total:
+                # recurrent suffix / fully-cached prompt: per-request
+                # path (promotion + final-logit recompute live there)
+                spent += self._prefill_step(req, left)
+                continue
+            end = total if left is None else min(total, start + left)
+            if not self._ensure_pages_upto(req.rid, end):
+                self.stats["prefill_stalls"] += 1
+                continue           # this member stalls; siblings proceed
+            batch.append((req, start, end))
+            spent += end - start
+        if len(batch) == 1:
+            req, start, end = batch[0]
+            self._prefill_step(req, end - start)
+        elif batch:
+            self._batched_suffix_prefill(batch)
+        return spent
+
+    def _batched_suffix_prefill(
+            self, batch: List[Tuple["Request", int, int]]) -> int:
+        """One padded dispatch over several requests' suffix chunks.
+
+        Cascade phase B: each row is a ``(request, start, end)`` span
+        whose pages are already ensured and whose KV front is filled up
+        to ``start``.  Rows pad to pow2 buckets (``core.plan.bucket_pow2``
+        conventions — query length, KV length and batch); padded query
+        slots carry position -1 (``L.mha`` masks them to a finite
+        uniform), padded KV slots are masked via ``kv_valid``.  Per-row
+        KV writes, sampling order and telemetry spans match the
+        sequential per-request path.
+        """
+        cfg = self.cfg
+        tm = self.telemetry
+        c0 = self.clock() if tm is not None else 0.0
+        B = len(batch)
+        Tn = [end - start for _, start, end in batch]
+        T_pad = plan_mod.bucket_pow2(max(Tn))
+        S_pad = plan_mod.bucket_pow2(max(end for _, _, end in batch))
+        B_pad = plan_mod.bucket_pow2(B)
+
+        tok = np.zeros((B_pad, T_pad), np.int32)
+        qpos = np.full((B_pad, T_pad), -1, np.int32)
+        kv_valid = np.zeros((B_pad, S_pad), bool)
+        for i, (req, start, end) in enumerate(batch):
+            tok[i, :Tn[i]] = req.seq[start:end]
+            qpos[i, :Tn[i]] = start + np.arange(Tn[i])
+            kv_valid[i, :end] = True
+        kv_pos = np.broadcast_to(np.arange(S_pad, dtype=np.int32),
+                                 (B_pad, S_pad))
+        qpos_j = jnp.asarray(qpos)
+
+        paths = {req.rid: self.forest.path(req.rid) for req, _, _ in batch}
+        segments: Dict[int, List[Tuple[Any, int, int]]] = {}
+        for req, start, end in batch:
+            segs, off = [], 0
+            for node in paths[req.rid]:
+                lo = max(0, off - start)
+                hi = min(end, off + node.length) - start
+                if hi > lo:
+                    segs.append((node, lo, hi))
+                off += node.length
+            segments[req.rid] = segs
+
+        x = T._embed(self.params, cfg, jnp.asarray(tok), qpos_j)
+        new_kv_writes = []   # (layer_attn, k (B_pad,T_pad,kv,hd), v)
+        for j, (kind, p) in enumerate(self.layers):
+            h = L.apply_norm(p["ln"], x, cfg)
+            la = self.attn_layer_idx[j]
+            window = (cfg.sliding_window if kind.mixer == "attn_local"
+                      else 0)
+            q, k_new, v_new = L.attn_project(p["attn"], cfg, h, qpos_j)
+            k_rows, v_rows = [], []
+            for i, (req, start, end) in enumerate(batch):
+                pk, pv = self._gather_prefix_upto(la, paths[req.rid],
+                                                  start)
+                kr = jnp.concatenate([pk.astype(k_new.dtype),
+                                      k_new[i, :Tn[i]]], 0)
+                vr = jnp.concatenate([pv.astype(v_new.dtype),
+                                      v_new[i, :Tn[i]]], 0)
+                pad = S_pad - kr.shape[0]
+                if pad:
+                    kr = jnp.pad(kr, ((0, pad), (0, 0), (0, 0)))
+                    vr = jnp.pad(vr, ((0, pad), (0, 0), (0, 0)))
+                k_rows.append(kr)
+                v_rows.append(vr)
+            k_all = jnp.stack(k_rows, 0)
+            v_all = jnp.stack(v_rows, 0)
+            if B_pad > B:
+                zpad = ((0, B_pad - B), (0, 0), (0, 0), (0, 0))
+                k_all = jnp.pad(k_all, zpad)
+                v_all = jnp.pad(v_all, zpad)
+            o = L.mha(q, k_all, v_all, causal=True, window=window,
+                      softcap=cfg.attn_logit_softcap,
+                      q_positions=qpos_j,
+                      kv_positions=jnp.asarray(kv_pos),
+                      kv_valid=jnp.asarray(kv_valid))
+            y = L.dense(p["attn"]["wo"],
+                        o.reshape(B_pad, T_pad,
+                                  cfg.num_heads * cfg.head_dim))
+            new_kv_writes.append((la, k_new, v_new))
+            x = x + y
+            x, _ = L.apply_ffn_block(p, cfg, kind.ffn, x)
+
+        # write each row's new KV into its own nodes' unfilled slots
+        ps = self.page_size
+        pages, offs, rows_b, rows_t = [], [], [], []
+        for i, (req, start, end) in enumerate(batch):
+            for node, lo, hi in segments[req.rid]:
+                filled = node.meta.get("filled", 0)
+                base = node.start_pos - start
+                t_hi = hi - base
+                reps = node.meta.get("replicas")
+                page_lists = (list(reps.values()) if reps
+                              else [node.page_ids])
+                for t in range(max(filled, lo - base), t_hi):
+                    for pl in page_lists:
+                        pages.append(pl[t // ps])
+                        offs.append(t % ps)
+                        rows_b.append(i)
+                        rows_t.append(base + t)
+                if t_hi > filled:
+                    node.meta["filled"] = t_hi
+        if pages:
+            bi = jnp.asarray(np.asarray(rows_b))
+            ti = jnp.asarray(np.asarray(rows_t))
+            for la, k_new, v_new in new_kv_writes:
+                self.pool.write_tokens(la, np.asarray(pages),
+                                       np.asarray(offs),
+                                       k_new[bi, ti], v_new[bi, ti])
+
+        done = sum(Tn)
+        self.stats["prefill_tokens"] += done
+        self.stats["cascade_suffix_tokens"] += done
+        self.stats["cascade_batches"] += 1
+        logits_all = None
+        for i, (req, start, end) in enumerate(batch):
+            self.stats["recompute_tokens"] += max(
+                0, min(end, req.computed_hwm) - start)
+            req.computed_hwm = max(req.computed_hwm, end)
+            if end < len(req.seq):
+                self.stats["prefill_chunks"] += 1
+                continue
+            if req.pending is None:
+                if logits_all is None:
+                    logits_all = T._unembed(self.params, cfg, x)
+                logits = logits_all[i, Tn[i] - 1]
+                self.key, sk = jax.random.split(self.key)
+                req.pending = int(sampler.sample(logits[None], sk,
+                                                 self.temperature)[0])
+            self._promote(req)
+        if tm is not None:
+            c1 = self.clock()
+            for i, (req, _, _) in enumerate(batch):
+                tm.complete("prefill_chunk", c0, c1, track=req.rid,
+                            args={"tokens": Tn[i], "batched": True})
+            tm.observe("prefill_chunk_s", c1 - c0)
+        return done
 
     def _admit(self, req: Request) -> None:
         """(Re-)insert the request's sequence into the forest and release
@@ -1226,10 +1591,14 @@ class DecodeEngine:
             req.first_tok_t = now
         req.last_tok_t = now
 
-    def _prefill_step(self, req: Request, budget: Optional[int]) -> int:
+    def _prefill_step(self, req: Request, budget: Optional[int],
+                      stop_at: Optional[int] = None) -> int:
         """Advance the request's prefill by one chunk of ``<= budget``
         tokens (``None`` = the whole remaining prompt); returns tokens
-        computed (0 = stalled on pages, retried next step).
+        computed (0 = stalled on pages, retried next step).  ``stop_at``
+        additionally caps the chunk at an absolute position — cascade
+        phase A uses it to stop exactly at the group's shared-path
+        frontier (DESIGN.md §14).
 
         Attention KV of the cached prefix is reused (gathered from the
         paged pool); SSM layers resume from the deepest cached boundary —
@@ -1246,22 +1615,19 @@ class DecodeEngine:
         path = self.forest.path(rid)
 
         # contiguous filled-KV front along the path
-        kv_filled = 0
-        for node in path:
-            f = min(node.meta.get("filled", 0), node.length)
-            kv_filled += f
-            if f < node.length:
-                break
+        kv_filled = self._filled_front(rid)
 
         has_mamba = any(k.mixer == "mamba" for k, _ in self.layers)
 
         if kv_filled < total:
             attn_start = kv_filled
         elif req.pending is None:
-            # fully cached prompt: recompute the last non-empty node so the
-            # final-position logits exist
-            last = next((n for n in reversed(path) if n.length > 0), None)
-            attn_start = total - (last.length if last is not None else 0)
+            # fully cached prompt: recompute only the final position so
+            # its logits exist — the KV itself is resident and nothing
+            # needs rewriting.  Recurrent archs still rewind to the
+            # deepest cached SSM boundary (mamba_start below), so hybrid
+            # spans stay bounded by the last node, not the whole prompt.
+            attn_start = total - 1
         else:
             attn_start = total
 
@@ -1292,6 +1658,9 @@ class DecodeEngine:
             else attn_start
         end = total if budget is None else min(
             total, max(span_start + max(budget, 1), kv_filled + 1))
+        if stop_at is not None and stop_at < end:
+            # never regress below the minimum-progress floor above
+            end = max(stop_at, min(kv_filled + 1, total))
 
         if not self._ensure_pages_upto(rid, end):
             self.stats["prefill_stalls"] += 1

@@ -52,7 +52,15 @@ METRIC_CATALOG: Dict[str, Tuple[str, str]] = {
     "prefill_tokens": ("counter", "prompt tokens prefilled"),
     "recompute_tokens": ("counter", "tokens recomputed after eviction"),
     "prefill_chunks": ("counter", "chunked prefill continuations"),
-    "prefill_stalls": ("counter", "prefill steps stalled on pages"),
+    "prefill_stalls": ("counter", "prefill chunks stalled on pages"),
+    # cascade prefill (DESIGN §14)
+    "cascade_groups": ("counter", "cascade group advances (>=2 members)"),
+    "cascade_shared_tokens": ("counter",
+                              "shared-span tokens siblings reused "
+                              "(computed once, saved N-1 times)"),
+    "cascade_suffix_tokens": ("counter",
+                              "suffix tokens in batched dispatches"),
+    "cascade_batches": ("counter", "batched suffix prefill dispatches"),
     # decode machinery
     "engine_steps": ("counter", "engine step() calls"),
     "decode_steps": ("counter", "steps that dispatched a decode"),
@@ -120,6 +128,10 @@ ENGINE_STAT_COUNTERS: Dict[str, str] = {
     "recompute_tokens": "recompute_tokens",
     "prefill_chunks": "prefill_chunks",
     "prefill_stalls": "prefill_stalls",
+    "cascade_groups": "cascade_groups",
+    "cascade_shared_tokens": "cascade_shared_tokens",
+    "cascade_suffix_tokens": "cascade_suffix_tokens",
+    "cascade_batches": "cascade_batches",
     "replans": "plan_rebuilds",
     "fused_calls": "fused_dispatches",
     "token_flushes": "token_flushes",

@@ -1,0 +1,237 @@
+"""Cascade prefill unit tests (DESIGN.md §14).
+
+Each test pins one hazard of sharing prefix compute across concurrent
+prefills: chunk boundaries landing mid-shared-node, node splits firing
+while a cascade is mid-flight, one member stalling on pages while its
+siblings proceed, preemption of a member mid-cascade, and hybrid /
+recurrent architectures resuming from the cascaded ``meta["ssm"]``
+boundary states.  The invariant throughout: ``cascade=True`` is a pure
+performance mode — greedy token streams must be byte-identical to the
+same engine with sequential prefill.
+
+Also locks down two accounting fixes that rode along with the cascade
+work: the fully-cached-prompt branch recomputes exactly one token for
+the final logits, and ``prefill_stalls`` counts stalled *chunks*, not
+once per request.
+"""
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import DecodeEngine
+
+PAGE = 8
+CFG = smoke_config("qwen2.5-14b")
+PARAMS = T.init_params(CFG, jax.random.PRNGKey(0))
+
+# shared doc (3 pages) + a decoy head whose private prompt absorbs the
+# first chunk budgets so the doc is still uncached when the burst's head
+# admits and pulls its cascade partners out of the queue
+DOC = list(range(10, 10 + 3 * PAGE))
+DECOY = list(range(120, 120 + 3 * PAGE)) + [99, 98]
+
+
+def _engine(cfg=CFG, params=PARAMS, **kw):
+    defaults = dict(page_size=PAGE, num_pages=256, backend="codec-xla",
+                    max_q=8, temperature=0.0)
+    defaults.update(kw)
+    return DecodeEngine(cfg, params, **defaults)
+
+
+def _drive(eng, schedule, max_steps=96, release=True):
+    """Run a ``(arrival_step, prompt, max_new)`` schedule to completion.
+
+    Returns ``{schedule index: generated tokens}`` and (when ``release``)
+    checks the engine is leak-free after all requests are released.
+    """
+    arrivals = {}
+    for i, (arr, _, _) in enumerate(schedule):
+        arrivals.setdefault(arr, []).append(i)
+    rid_of = {}
+    for s in range(max_steps):
+        for i in arrivals.pop(s, []):
+            _, prompt, max_new = schedule[i]
+            rid_of[i] = eng.add_request(prompt, max_new=max_new)
+        if not arrivals and not eng.has_work():
+            break
+        eng.step()
+    assert not arrivals and not eng.has_work(), "schedule did not finish"
+    outs = {i: list(eng.requests[r].generated) for i, r in rid_of.items()}
+    if release:
+        for r in list(eng.requests):
+            eng.release(r)
+        assert eng.pool.num_free == eng.pool.num_pages, "leaked pages"
+        eng.pool.allocator.check()
+        assert set(eng.forest.nodes) == {0}, "leaked forest nodes"
+    return outs
+
+
+def _burst(doc=DOC, n=3, tail=2):
+    """Decoy head + ``n`` requests sharing ``doc``, all arriving at 0."""
+    sched = [(0, DECOY, 4)]
+    sched += [(0, doc + [200 + 5 * i + j for j in range(tail)], 4)
+              for i in range(n)]
+    return sched
+
+
+# --------------------------------------------------------------------- #
+# chunk boundary mid-shared-node
+# --------------------------------------------------------------------- #
+def test_chunk_boundary_mid_shared_node():
+    """prefill_chunk=4 < page_size=8: every shared-span chunk ends in the
+    middle of a node, so siblings must resume from a mid-node boundary —
+    streams still byte-identical to sequential prefill."""
+    sched = _burst()
+    seq = _drive(_engine(prefill_chunk=4), sched)
+    eng = _engine(prefill_chunk=4, cascade=True)
+    cas = _drive(eng, sched, release=False)
+    assert cas == seq
+    assert eng.stats["cascade_groups"] >= 1, eng.stats
+    assert eng.stats["cascade_shared_tokens"] > 0, eng.stats
+
+
+# --------------------------------------------------------------------- #
+# on_split during a mid-flight cascade
+# --------------------------------------------------------------------- #
+def test_on_split_mid_cascade():
+    """A request landing mid-prefill whose prompt diverges inside the
+    shared doc splits the node the cascade is filling; pin bookkeeping
+    (``on_split``) and the streams must both survive."""
+    sched = _burst(doc=list(range(10, 10 + 4 * PAGE)))
+    splitter = (2, list(range(10, 10 + 2 * PAGE)) + [210, 211], 4)
+    sched.append(splitter)
+    seq = _drive(_engine(prefill_chunk=PAGE), sched)
+
+    eng = _engine(prefill_chunk=PAGE, cascade=True)
+    fired = []
+    orig = eng.forest.on_split
+
+    def spy(upper, lower):
+        fired.append((upper.id, lower.id))
+        if orig is not None:
+            orig(upper, lower)
+
+    eng.forest.on_split = spy
+    cas = _drive(eng, sched, release=False)
+    assert fired, "expected a node split during the run"
+    assert cas == seq
+    eng.check()
+
+
+# --------------------------------------------------------------------- #
+# page stall for one member while siblings proceed
+# --------------------------------------------------------------------- #
+def test_page_stall_one_member():
+    """One member's suffix chunks stall on pages for 3 chunks; its
+    siblings keep cascading and every stream still matches sequential."""
+    sched = _burst()
+    seq = _drive(_engine(prefill_chunk=PAGE), sched)
+
+    eng = _engine(prefill_chunk=PAGE, cascade=True)
+    rids = [eng.add_request(p, max_new=mn) for _, p, mn in sched]
+    victim = rids[-1]
+    orig = eng._ensure_pages_upto
+    denied = {"n": 0}
+
+    def flaky(rid, upto):
+        if rid == victim and denied["n"] < 3:
+            denied["n"] += 1
+            return False
+        return orig(rid, upto)
+
+    eng._ensure_pages_upto = flaky
+    for _ in range(96):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert not eng.has_work()
+    cas = {i: list(eng.requests[r].generated) for i, r in enumerate(rids)}
+    assert cas == seq
+    assert denied["n"] == 3
+    assert eng.stats["prefill_stalls"] >= 3, eng.stats
+    assert eng.stats["cascade_shared_tokens"] > 0, eng.stats
+
+
+# --------------------------------------------------------------------- #
+# preemption of one member mid-cascade
+# --------------------------------------------------------------------- #
+def test_preempt_member_mid_cascade():
+    """Undersized pool: a cascade member gets preempted mid-prefill and
+    its recompute (through the cascade path again) must reproduce the
+    unconstrained sequential streams byte-for-byte."""
+    doc = list(range(10, 10 + 6 * PAGE))
+    sched = [(0, doc + [200 + 3 * i + j for j in range(3)], 6)
+             for i in range(4)]
+    seq = _drive(_engine(), sched)
+    eng = _engine(num_pages=9, prefill_chunk=PAGE, cascade=True)
+    cas = _drive(eng, sched, release=False)
+    assert cas == seq
+    assert eng.stats["preempted"] >= 1, eng.stats
+    assert eng.stats["recompute_tokens"] >= 1, eng.stats
+
+
+# --------------------------------------------------------------------- #
+# hybrid / recurrent archs resume from the cascaded meta["ssm"]
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "mamba2-2.7b"])
+def test_recurrent_resume_from_cascaded_state(arch):
+    """Mamba and hybrid models: siblings resume from the SSM boundary
+    states the cascaded shared span cached (mid-node carry included,
+    prefill_chunk=4 forces non-aligned boundaries)."""
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    doc = [(10 + i) % cfg.vocab_size for i in range(24)]
+    sched = [(0, [(150 + i) % cfg.vocab_size for i in range(16)] + [7, 8],
+              3)]
+    sched += [(0, doc + [100 + 3 * i + j for j in range(2)], 4)
+              for i in range(3)]
+    seq = _drive(_engine(cfg, params, prefill_chunk=4), sched)
+    eng = _engine(cfg, params, prefill_chunk=4, cascade=True)
+    cas = _drive(eng, sched, release=False)
+    assert cas == seq
+    assert eng.stats["cascade_groups"] >= 1, eng.stats
+    assert eng.stats["cascade_shared_tokens"] > 0, eng.stats
+
+
+# --------------------------------------------------------------------- #
+# fully-cached prompt: minimal final-logit recompute (regression)
+# --------------------------------------------------------------------- #
+def test_fully_cached_prompt_recomputes_one_token():
+    """A prompt whose KV is entirely cached needs exactly ONE recomputed
+    token (the last, for the final logits) — the old code re-ran the
+    whole last node."""
+    eng = _engine(prefill_chunk=PAGE)
+    prompt = list(range(10, 10 + 3 * PAGE))
+    r0 = eng.add_request(prompt, max_new=4)
+    first = eng.run(48)[r0]
+    before = eng.stats["prefill_tokens"]
+    r1 = eng.add_request(prompt, max_new=4)
+    while eng.has_work():
+        eng.step()
+    assert eng.stats["prefill_tokens"] - before == 1, eng.stats
+    assert list(eng.requests[r1].generated) == first
+
+
+# --------------------------------------------------------------------- #
+# prefill_stalls counts stalled chunks, not once per request
+# --------------------------------------------------------------------- #
+def test_prefill_stalls_counts_chunks():
+    sched = [(0, list(range(10, 10 + 3 * PAGE)), 3)]
+    seq = _drive(_engine(prefill_chunk=PAGE), sched)
+
+    eng = _engine(prefill_chunk=PAGE)
+    orig = eng._ensure_pages_upto
+    denied = {"n": 0}
+
+    def flaky(rid, upto):
+        if denied["n"] < 3:
+            denied["n"] += 1
+            return False
+        return orig(rid, upto)
+
+    eng._ensure_pages_upto = flaky
+    cas = _drive(eng, sched, release=False)
+    assert cas == seq
+    assert eng.stats["prefill_stalls"] == 3, eng.stats

@@ -53,13 +53,39 @@ def make_workload(seed):
     return out
 
 
+def make_burst_workload(seed):
+    """Seeded burst: requests sharing uncached prefixes, all arriving at
+    step 0.  A decoy head request (its own private doc) absorbs the
+    initial chunked-prefill budget, so the shared doc is still *uncached*
+    when the burst's head is admitted and cascade co-admission pulls its
+    partners out of the queue — the cascade path then computes the
+    shared span once and batches the suffix chunks.
+    """
+    rng = np.random.default_rng(seed)
+    decoy = rng.integers(0, CFG.vocab_size, 3 * PAGE).tolist()
+    docs = [rng.integers(0, CFG.vocab_size,
+                         int(rng.integers(3, 7)) * PAGE).tolist()
+            for _ in range(int(rng.integers(1, 3)))]
+    out = [(decoy + rng.integers(0, CFG.vocab_size, 2).tolist(), 4, 0)]
+    for _ in range(int(rng.integers(3, 6))):
+        doc = docs[int(rng.integers(0, len(docs)))]
+        tail = rng.integers(0, CFG.vocab_size,
+                            int(rng.integers(1, 5))).tolist()
+        out.append((doc + tail, int(rng.integers(3, 7)), 0))
+    return out
+
+
 def run_workload(backend, workload, *, num_pages=512, prefill_chunk=None,
-                 reserve_pages=0, max_steps=64, fused=False):
+                 reserve_pages=0, max_steps=64, fused=False,
+                 cascade=False, cache=False):
     """Run a workload end-to-end; returns ({idx: generated}, stats)."""
+    from repro.serving.cache import CachePolicy
     eng = DecodeEngine(CFG, PARAMS, page_size=PAGE, num_pages=num_pages,
                        backend=backend, max_q=8, temperature=0.0,
                        prefill_chunk=prefill_chunk,
-                       reserve_pages=reserve_pages, fused=fused)
+                       reserve_pages=reserve_pages, fused=fused,
+                       cascade=cascade,
+                       cache=CachePolicy() if cache else None)
     arrivals = {}
     for i, (_, _, arr) in enumerate(workload):
         arrivals.setdefault(arr, []).append(i)
@@ -81,6 +107,8 @@ def run_workload(backend, workload, *, num_pages=512, prefill_chunk=None,
     # no leaked pages / dangling refcounts / stray nodes after release
     for r in list(eng.requests):
         eng.release(r)
+    if cache:
+        eng._evict_cached(eng.pool.num_pages)   # drain cached residency
     assert eng.pool.num_free == eng.pool.num_pages, "leaked pages"
     eng.pool.allocator.check()
     assert set(eng.forest.nodes) == {0}, "leaked forest nodes"
@@ -90,10 +118,14 @@ def run_workload(backend, workload, *, num_pages=512, prefill_chunk=None,
 _ORACLE = {}
 
 
-def oracle(key, workload):
-    """Unconstrained ``ref``-backend run, cached per workload."""
+def oracle(key, workload, backend="ref", **kw):
+    """Reference run (default: unconstrained ``ref``), cached per key.
+
+    Cascade tests pass the same backend/chunking as the run under test
+    with ``cascade=False`` — the oracle is then literally "sequential
+    prefill, everything else equal"."""
     if key not in _ORACLE:
-        _ORACLE[key] = run_workload("ref", workload)[0]
+        _ORACLE[key] = run_workload(backend, workload, **kw)[0]
     return _ORACLE[key]
 
 
@@ -166,6 +198,66 @@ def test_oversized_prompt_still_fails_fast():
                        backend="codec-xla", temperature=0.0)
     with pytest.raises(MemoryError):
         eng.add_request(list(range(200)), max_new=2)
+
+
+# --------------------------------------------------------------------- #
+# cascade prefill (DESIGN.md §14): cascade=True must be a pure
+# performance mode — token streams byte-identical to sequential prefill
+# across eager / fused / cached engine modes, leak-free after release
+# --------------------------------------------------------------------- #
+BURST_SEEDS = [0, 1, 2]
+
+
+@pytest.mark.parametrize("seed", BURST_SEEDS)
+def test_cascade_differential_eager(seed):
+    wl = make_burst_workload(seed)
+    got, stats = run_workload("codec-xla", wl, prefill_chunk=PAGE,
+                              cascade=True)
+    assert got == oracle(("burst", seed, "chunk"), wl,
+                         backend="codec-xla", prefill_chunk=PAGE)
+    # the burst really cascaded: groups formed and shared spans were
+    # computed once on behalf of the whole group
+    assert stats["cascade_groups"] >= 1, stats
+    assert stats["cascade_shared_tokens"] > 0, stats
+
+
+@pytest.mark.parametrize("seed", BURST_SEEDS[:2])
+def test_cascade_differential_fused(seed):
+    wl = make_burst_workload(seed)
+    got, stats = run_workload("codec-xla", wl, prefill_chunk=PAGE,
+                              cascade=True, fused=True)
+    assert got == oracle(("burst", seed, "chunk"), wl,
+                         backend="codec-xla", prefill_chunk=PAGE)
+    assert stats["cascade_groups"] >= 1, stats
+
+
+@pytest.mark.parametrize("seed", BURST_SEEDS[:2])
+def test_cascade_differential_cached(seed):
+    wl = make_burst_workload(seed)
+    got, stats = run_workload("codec-xla", wl, prefill_chunk=PAGE,
+                              cascade=True, cache=True)
+    assert got == oracle(("burst", seed, "chunk"), wl,
+                         backend="codec-xla", prefill_chunk=PAGE)
+    assert stats["cascade_groups"] >= 1, stats
+
+
+def test_cascade_under_pressure():
+    """Cascade + undersized pool: preemption can hit mid-cascade and the
+    recompute must still match the unconstrained sequential oracle."""
+    got, stats = run_workload("codec-xla", FIXED_WORKLOAD, cascade=True,
+                              **PRESSURE)
+    assert got == oracle(("fixed",), FIXED_WORKLOAD)
+    assert stats["preempted"] >= 1, stats
+
+
+def test_cascade_batches_suffixes_into_one_dispatch():
+    """Unbudgeted burst over one uncached doc: the whole group co-admits
+    behind the decoy and its suffix chunks ride one padded dispatch."""
+    wl = make_burst_workload(0)
+    got, stats = run_workload("codec-xla", wl, prefill_chunk=PAGE,
+                              cascade=True)
+    assert stats["cascade_batches"] >= 1, stats
+    assert stats["cascade_suffix_tokens"] >= 2, stats
 
 
 # --------------------------------------------------------------------- #
